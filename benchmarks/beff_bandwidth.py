@@ -1,0 +1,52 @@
+"""Paper Fig. 10 + Fig. 11 + Eqs. 1/2/4 — b_eff bandwidth vs message size and
+ring-size scaling, for both communication backends, with the analytical
+model overlays (520N constants validate the reproduction; TPU v5e constants
+give the production prediction)."""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, fmt_bw, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.core import models  # noqa: E402
+from repro.core.beff import run_beff  # noqa: E402
+from repro.launch.mesh import make_ring_mesh  # noqa: E402
+
+
+def main(quick: bool = False):
+    mesh = make_ring_mesh()
+    n = mesh.devices.size
+    max_log = 12 if quick else 16
+    reps = 2 if quick else 3
+
+    print(f"== b_eff (paper Fig. 10/11) over {n} devices ==")
+    results = {}
+    for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
+        res = run_beff(mesh, ct, max_log=max_log, reps=reps, rounds=2)
+        results[ct.value] = res
+        rows = []
+        for L, bw in sorted(res.details["bandwidth_by_size"].items()):
+            rows.append([L, fmt_bw(bw),
+                         fmt_bw(models.beff_ici_model(L)),
+                         fmt_bw(models.beff_host_staged_model(L)),
+                         fmt_bw(models.beff_csn_model_520n(L))])
+        print(f"\n-- backend={ct.value}  b_eff={fmt_bw(res.metric)} "
+              f"errors={res.error}")
+        print(table(rows, ["msg_B", "measured", "model:ICI(v5e)",
+                           "model:PCIe+MPI(v5e)", "model:CSN(520N Eq.4)"]))
+
+    ratio = results["ici_direct"].metric / max(results["host_staged"].metric, 1e-9)
+    print(f"\nICI_DIRECT / HOST_STAGED effective-bandwidth ratio: {ratio:.2f}x "
+          "(paper: direct CSN wins, Fig. 10)")
+    save_result("beff_bandwidth", {
+        k: {"b_eff": v.metric, "bandwidth_by_size": v.details["bandwidth_by_size"],
+            "error": v.error}
+        for k, v in results.items()})
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: fake-device meshes, result records, tables."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def ensure_devices(n: int = 8):
+    """Must be called before jax import wherever multi-device CPU is needed."""
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+
+
+def save_result(name: str, record: Dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def table(rows: List[List], headers: List[str]) -> str:
+    cols = [headers] + [[str(c) for c in r] for r in rows]
+    widths = [max(len(r[i]) for r in cols) for i in range(len(headers))]
+    def fmt(r):
+        return "  ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    out = [fmt(headers), fmt(["-" * w for w in widths])]
+    out += [fmt(r) for r in rows]
+    return "\n".join(out)
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PiB"
+
+
+def fmt_bw(b: float) -> str:
+    for unit in ("B/s", "KB/s", "MB/s", "GB/s", "TB/s"):
+        if abs(b) < 1000:
+            return f"{b:.2f}{unit}"
+        b /= 1000
+    return f"{b:.2f}PB/s"

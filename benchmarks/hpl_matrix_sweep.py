@@ -1,0 +1,60 @@
+"""Paper Fig. 13 — HPL performance vs matrix size on a single device, two
+block sizes (the paper sweeps block 512 vs 256), plus both distributed
+backends at a fixed size for the communication-overlap comparison."""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.core.hpl import run_hpl  # noqa: E402
+from repro.core.hpl_blocked import run_hpl_single  # noqa: E402
+from repro.launch.mesh import make_torus_mesh  # noqa: E402
+
+
+def main(quick: bool = False):
+    sizes = [128, 256, 384] if quick else [128, 256, 384, 512, 768]
+    blocks = [32, 64]
+
+    print("== HPL matrix-size sweep, single device (paper Fig. 13) ==")
+    rows = []
+    record = {"single": {}}
+    curve = {}
+    for b in blocks:
+        for n in sizes:
+            if n % b:
+                continue
+            res = run_hpl_single(n=n, b=b, reps=2)
+            rows.append([n, b, f"{res.metric:.3f}", f"{res.error:.2e}",
+                         f"{res.times['best']*1e3:.1f}ms"])
+            record["single"][f"n{n}_b{b}"] = {
+                "gflops": res.metric, "err": res.error}
+            if b == 64:
+                curve[n] = res.metric
+    print(table(rows, ["n", "block", "GFLOP/s", "resid", "time"]))
+
+    print("\n== HPL distributed 2x2 torus, both backends (Fig. 13 PCIe vs IEC) ==")
+    n_dev = len(jax.devices())
+    if n_dev >= 4:
+        mesh = make_torus_mesh(2)
+        n = 256 if quick else 512
+        rows = []
+        for ct, sched in ((CT.ICI_DIRECT, "chain"), (CT.ICI_DIRECT, "native"),
+                          (CT.HOST_STAGED, "staged")):
+            res = run_hpl(mesh, ct, n=n, b=64, schedule=sched, reps=1)
+            rows.append([ct.value, sched, n, f"{res.metric:.3f}",
+                         f"{res.error:.2e}"])
+            record[f"dist/{ct.value}/{sched}"] = {"gflops": res.metric,
+                                                  "err": res.error}
+        print(table(rows, ["backend", "schedule", "n", "GFLOP/s", "resid"]))
+
+    record["single_curve_b64"] = curve
+    save_result("hpl_matrix_sweep", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

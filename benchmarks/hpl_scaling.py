@@ -1,0 +1,69 @@
+"""Paper Figs. 14/15 — HPL weak/strong scaling over the torus plus the
+single-device extrapolation model (the paper's Fig. 15 colored lines)."""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.core.hpl import run_hpl  # noqa: E402
+from repro.core.hpl_blocked import run_hpl_single  # noqa: E402
+from repro.core.models import hpl_strong_scaling_model  # noqa: E402
+from repro.launch.mesh import make_torus_mesh  # noqa: E402
+
+
+def main(quick: bool = False):
+    n_dev = len(jax.devices())
+    grids = [g for g in (1, 2) if g * g <= n_dev]
+    n_base = 256 if quick else 512
+    b = 64
+
+    print("== HPL scaling (paper Figs. 14/15) ==")
+    record = {}
+    rows = []
+    base = {}
+    for label, strong in (("strong", True), ("weak", False)):
+        for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
+            for g in grids:
+                n = n_base if strong else n_base * g
+                if (n // b) % max(g, 1):
+                    continue
+                if g == 1:
+                    res = run_hpl_single(n=n, b=b, reps=1)
+                else:
+                    res = run_hpl(make_torus_mesh(g), ct, n=n, b=b,
+                                  schedule="native", reps=1)
+                key = (label, ct.value)
+                if key not in base:
+                    base[key] = res.metric
+                rows.append([label, ct.value, f"{g}x{g}", n,
+                             f"{res.metric:.3f}",
+                             f"{res.metric / base[key]:.2f}x",
+                             f"{res.error:.2e}"])
+                record[f"{label}/{ct.value}/g{g}"] = {
+                    "n": n, "gflops": res.metric, "err": res.error}
+    print(table(rows, ["scaling", "backend", "grid", "n", "GFLOP/s",
+                       "speedup", "resid"]))
+
+    # Fig. 15 extrapolation: single-device perf-vs-size curve -> predicted
+    # aggregate strong-scaling performance on larger tori
+    print("\n-- strong-scaling extrapolation from the single-device curve "
+          "(paper Fig. 15 model) --")
+    sizes = [128, 256] if quick else [128, 256, 384, 512]
+    curve = {}
+    for n in sizes:
+        res = run_hpl_single(n=n, b=b, reps=1, validate=False)
+        curve[n] = res.metric
+    model = hpl_strong_scaling_model(curve, n_base, [1, 4, 9, 16, 25])
+    rows = [[d, f"{p:.3f}"] for d, p in model.items()]
+    print(table(rows, ["devices", "predicted aggregate GFLOP/s"]))
+    record["extrapolation"] = model
+    save_result("hpl_scaling", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 16 — the legacy HPCC benchmarks (STREAM, RandomAccess, FFT,
+GEMM) scaled over devices, normalized like the paper normalizes per memory
+bank / kernel replication."""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, fmt_bw, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+
+from repro.core.fft import run_fft  # noqa: E402
+from repro.core.gemm import run_gemm  # noqa: E402
+from repro.core.randomaccess import run_randomaccess  # noqa: E402
+from repro.core.stream import run_stream  # noqa: E402
+from repro.launch.mesh import make_ring_mesh  # noqa: E402
+
+
+def main(quick: bool = False):
+    mesh = make_ring_mesh()
+    n = mesh.devices.size
+
+    print(f"== legacy suite (paper Fig. 16) over {n} devices ==")
+    record = {}
+    rows = []
+
+    res = run_stream(mesh, elems_per_device=(1 << 18) if quick else (1 << 20))
+    rows.append(["STREAM", "triad B/s", fmt_bw(res.metric),
+                 fmt_bw(res.metric / n) + "/dev", f"{res.error:.2e}"])
+    record["stream"] = {"triad_bps": res.metric,
+                        "bandwidth": res.details["bandwidth"]}
+
+    res = run_randomaccess(mesh, table_log=16 if quick else 20,
+                           updates_per_rng=1024 if quick else 4096)
+    rows.append(["RandomAccess", "GUPS", f"{res.metric:.4f}",
+                 f"{res.metric / n:.4f}/dev", f"{res.error:.2e}"])
+    record["randomaccess"] = {"gups": res.metric, "err": res.error}
+
+    res = run_fft(mesh, log_size=10 if quick else 14,
+                  batch_per_device=16 if quick else 64)
+    rows.append(["FFT", "GFLOP/s", f"{res.metric:.2f}",
+                 f"{res.metric / n:.2f}/dev", f"{res.error:.2e}"])
+    record["fft"] = {"gflops": res.metric, "err": res.error}
+
+    res = run_gemm(mesh, m=256 if quick else 512)
+    rows.append(["GEMM", "GFLOP/s", f"{res.metric:.2f}",
+                 f"{res.metric / n:.2f}/dev", f"{res.error:.2e}"])
+    record["gemm"] = {"gflops": res.metric, "err": res.error}
+
+    print(table(rows, ["benchmark", "metric", "aggregate", "normalized",
+                       "error"]))
+    save_result("legacy_suite", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Beyond-paper — LM train/serve step timings (reduced configs, measured on
+CPU for regression) + the production-mesh roofline summary per assigned
+architecture (read from the dry-run results)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import ensure_devices, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import RunConfig, get_config, list_archs, reduced  # noqa: E402
+from repro.data import DataConfig, SyntheticLMDataset  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.train.serve import make_decode_step, make_prefill_step  # noqa: E402
+from repro.train.step import init_train_state, make_train_step  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main(quick: bool = False):
+    archs = (["llama3-8b", "mamba2-130m", "qwen3-moe-235b-a22b"]
+             if quick else list_archs())
+    B, S = 4, 64
+
+    print("== LM step bench (reduced configs, CPU wall-time) ==")
+    rows = []
+    record = {}
+    for arch in archs:
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        data = SyntheticLMDataset(DataConfig(cfg.vocab_size, B, S))
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros((B, cfg.num_patches,
+                                               cfg.vision_dim), jnp.float32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros((B, cfg.audio_ctx, cfg.d_model),
+                                        jnp.float32)
+
+        state = init_train_state(model, jax.random.key(0))
+        step = make_train_step(
+            model, RunConfig(learning_rate=1e-3, warmup_steps=1),
+            jax.sharding.Mesh(jax.devices()[:1], ("x",)), donate=False)
+        state, _ = step(state, batch)  # compile
+        t0 = time.perf_counter()
+        state, metrics = jax.block_until_ready(step(state, batch))
+        t_train = time.perf_counter() - t0
+
+        cache = model.init_cache(B, S + 8, jnp.float32)
+        prefill = make_prefill_step(model)
+        decode = make_decode_step(model)
+        logits, cache = prefill(state.params, batch, cache)
+        dec_extras = {k: v for k, v in batch.items()
+                      if k not in ("tokens", "frames")}
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        _, cache = decode(state.params, tok, cache, dec_extras)  # compile
+        t0 = time.perf_counter()
+        _, cache = jax.block_until_ready(
+            decode(state.params, tok, cache, dec_extras))
+        t_decode = time.perf_counter() - t0
+
+        rows.append([arch, f"{t_train*1e3:.1f}ms", f"{t_decode*1e3:.2f}ms",
+                     f"{float(metrics['loss']):.3f}"])
+        record[arch] = {"train_step_s": t_train, "decode_step_s": t_decode}
+    print(table(rows, ["arch", "train_step", "decode_step", "loss"]))
+
+    # production roofline per arch (train_4k, single pod) from the dry-run
+    if os.path.isdir(DRYRUN_DIR):
+        rows = []
+        for arch in archs:
+            tag = f"{arch}__train_4k__single.json"
+            path = os.path.join(DRYRUN_DIR, tag)
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") != "ok":
+                continue
+            bound = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+            mfu_bound = rec["model_flops"] / 512 / (bound * 197e12 * 256 / 512) \
+                if bound else 0
+            rows.append([arch, f"{rec['compute_s']:.3g}",
+                         f"{rec['memory_s']:.3g}",
+                         f"{rec['collective_s']:.3g}", rec["dominant"],
+                         f"{rec['useful_ratio']:.1%}"])
+        if rows:
+            print("\n-- production mesh (train_4k, 256 chips) roofline --")
+            print(table(rows, ["arch", "compute_s", "memory_s", "coll_s",
+                               "dominant", "useful"]))
+    save_result("lm_step_bench", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

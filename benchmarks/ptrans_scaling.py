@@ -1,0 +1,56 @@
+"""Paper Fig. 12 + Eqs. 5/6 — PTRANS strong/weak scaling over the device
+grid, both backends, with the block-time model overlay."""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.core import models  # noqa: E402
+from repro.core.ptrans import run_ptrans  # noqa: E402
+from repro.launch.mesh import make_torus_mesh  # noqa: E402
+
+
+def main(quick: bool = False):
+    n_dev = len(jax.devices())
+    grids = [g for g in (1, 2, 3) if g * g <= n_dev]
+    n_base = 256 if quick else 512
+    b = 64
+    reps = 2
+
+    print("== PTRANS scaling (paper Fig. 12) ==")
+    record = {}
+    for label, strong in (("strong", True), ("weak", False)):
+        rows = []
+        base_perf = {}
+        for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
+            for g in grids:
+                n = n_base if strong else n_base * g
+                if n % (g * b):
+                    continue
+                mesh = make_torus_mesh(g)
+                res = run_ptrans(mesh, ct, n=n, b=b, reps=reps)
+                key = (ct.value, g)
+                record[f"{label}/{ct.value}/g{g}"] = {
+                    "n": n, "gflops": res.metric, "err": res.error,
+                    "time": res.times["best"]}
+                if g == grids[0]:
+                    base_perf[ct.value] = res.metric
+                speedup = res.metric / base_perf[ct.value]
+                model_t = models.ptrans_block_time(
+                    b, 4, staged=(ct is CT.HOST_STAGED))
+                rows.append([label, ct.value, f"{g}x{g}", n,
+                             f"{res.metric:.3f}", f"{speedup:.2f}x",
+                             f"{res.error:.2e}", f"{model_t*1e6:.1f}us"])
+        print(table(rows, ["scaling", "backend", "grid", "n", "GFLOP/s",
+                           "speedup", "max_err", "model_t/blk(v5e)"]))
+        print()
+    save_result("ptrans_scaling", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

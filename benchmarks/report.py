@@ -1,0 +1,51 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def fmt(v, pat="{:.3g}"):
+    return pat.format(v)
+
+
+def main(d=DRYRUN_DIR):
+    recs = []
+    skips = []
+    for fn in sorted(os.listdir(d)):
+        with open(os.path.join(d, fn)) as f:
+            r = json.load(f)
+        (skips if r.get("status") == "skipped" else recs).append(r)
+    recs = [r for r in recs if r.get("status") == "ok"]
+
+    print("| arch | shape | mesh | FLOPs/dev | HBM B/dev | wire B/dev | "
+          "compute_s | memory_s | coll_s | dominant | useful | rf |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ideal = r["model_flops"] / r["chips"] / 197e12
+        rf = ideal / step if step else 0.0
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt(r['flops_per_device'])} "
+              f"| {fmt(r['hbm_bytes_per_device'])} "
+              f"| {fmt(r['collective_wire_bytes'])} "
+              f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+              f"| {fmt(r['collective_s'])} | {r['dominant']} "
+              f"| {r['useful_ratio']:.1%} | {rf:.3f} |")
+    print(f"\n{len(recs)} cells compiled ok; {len(skips)} documented skips "
+          "(long_500k on pure full-attention archs).")
+    # fitting summary
+    over = [r for r in recs
+            if r.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+            + r.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+            > 16 * 2**30]
+    if over:
+        print(f"cells above 16 GiB/device (args+temp): "
+              f"{[(r['arch'], r['shape'], r['mesh']) for r in over]}")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

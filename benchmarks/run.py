@@ -1,0 +1,57 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+
+One module per paper table/figure (DESIGN.md §6):
+  beff_bandwidth   Fig. 10/11 + Eqs. 1/2/4
+  ptrans_scaling   Fig. 12 + Eqs. 5/6
+  hpl_matrix_sweep Fig. 13
+  hpl_scaling      Figs. 14/15
+  legacy_suite     Fig. 16
+  resource_table   Table 7 analogue (production-mesh compiled footprints)
+  lm_step_bench    beyond-paper LM roofline table
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import ensure_devices
+
+ensure_devices()  # 8 placeholder CPU devices for every measured benchmark
+
+MODULES = [
+    "beff_bandwidth",
+    "ptrans_scaling",
+    "hpl_matrix_sweep",
+    "hpl_scaling",
+    "legacy_suite",
+    "resource_table",
+    "lm_step_bench",
+]
+
+
+def main():
+    quick = "--quick" in sys.argv
+    only = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = []
+    for name in (only or MODULES):
+        print("\n" + "=" * 78)
+        print(f"### benchmarks.{name}")
+        print("=" * 78)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=quick)
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"[{name} FAILED]\n{traceback.format_exc()[-3000:]}")
+    print("\n" + "=" * 78)
+    if failures:
+        print("FAILED:", failures)
+        raise SystemExit(1)
+    print("all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

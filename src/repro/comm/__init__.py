@@ -1,0 +1,14 @@
+from repro.comm.types import (  # noqa: F401
+    BITTWARE_520N,
+    CommunicationType,
+    HardwareModel,
+    TPU_V5E,
+    comm_type,
+)
+from repro.comm.collectives import (  # noqa: F401
+    all_to_all_tiles,
+    psum_schedule,
+    ring_bcast,
+    ring_exchange_bidir,
+    ring_shift,
+)

@@ -1,0 +1,46 @@
+"""Overlap-friendly gradient reduction.
+
+The paper hides HPL's communication phase behind the update phase's GEMMs
+(Fig. 5/7). The LM-training analogue: gradient all-reduce overlapped with
+backward compute. Under XLA the overlap happens when the reduction is split
+into independent buckets whose producers finish at different times — the
+scheduler then interleaves collective-permute/all-reduce ops with remaining
+compute. ``bucketed_psum_tree`` provides that structure.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def bucketed_psum_tree(grads, axis: str, bucket_bytes: int = 32 * 2**20):
+    """psum a gradient pytree over ``axis`` in independent buckets.
+
+    Leaves are greedily packed into ~bucket_bytes groups; each group is
+    reduced with its own psum so XLA can start reducing early buckets while
+    later gradients are still being computed (reverse-mode emits leaf grads
+    in backward order).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    buckets: List[List[int]] = [[]]
+    acc = 0
+    for i, leaf in enumerate(leaves):
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if acc + nbytes > bucket_bytes and buckets[-1]:
+            buckets.append([])
+            acc = 0
+        buckets[-1].append(i)
+        acc += nbytes
+    out = list(leaves)
+    for bucket in buckets:
+        reduced = lax.psum(tuple(leaves[i] for i in bucket), axis)
+        for j, i in enumerate(bucket):
+            out[i] = reduced[j]
+    return jax.tree.unflatten(treedef, out)

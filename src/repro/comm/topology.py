@@ -1,0 +1,60 @@
+"""Topology helpers: rings and 2-D tori over mesh axes, PQ block ownership.
+
+These mirror the paper's network setups: the b_eff ring, the PTRANS P=Q pair
+grid, and the HPL 2-D torus (paper Figs. 2, 3, 8). On TPU the physical torus
+is fixed; these helpers define *logical* topologies over mesh axis names that
+XLA maps onto ICI.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def ring_perm(size: int, shift: int = 1) -> List[Tuple[int, int]]:
+    """(source, dest) pairs for a ring ppermute by ``shift``."""
+    return [(i, (i + shift) % size) for i in range(size)]
+
+
+def transpose_perm(p: int) -> List[Tuple[int, int]]:
+    """Pair (r, c) <-> (c, r) on a p x p grid flattened row-major —
+    the PTRANS partner exchange (paper §2.2.2, P = Q required)."""
+    return [(r * p + c, c * p + r) for r in range(p) for c in range(p)]
+
+
+def torus_neighbors(p: int, q: int) -> dict:
+    """Neighbor permutations for a p x q torus flattened row-major:
+    right/left along rows, down/up along columns (paper Fig. 8 directions)."""
+    def flat(r, c):
+        return r * q + c
+    return {
+        "right": [(flat(r, c), flat(r, (c + 1) % q)) for r in range(p) for c in range(q)],
+        "left": [(flat(r, c), flat(r, (c - 1) % q)) for r in range(p) for c in range(q)],
+        "down": [(flat(r, c), flat((r + 1) % p, c)) for r in range(p) for c in range(q)],
+        "up": [(flat(r, c), flat((r - 1) % p, c)) for r in range(p) for c in range(q)],
+    }
+
+
+def pq_owner(block_i: int, block_j: int, p: int, q: int) -> Tuple[int, int]:
+    """Block-cyclic PQ ownership (paper Fig. 3): block (i, j) lives on grid
+    coordinate (i mod P, j mod Q)."""
+    return block_i % p, block_j % q
+
+
+def local_block_count(nblocks: int, p: int) -> int:
+    """Blocks per grid row/col under block-cyclic distribution (must divide
+    evenly for the kernels here; callers validate)."""
+    if nblocks % p:
+        raise ValueError(f"nblocks={nblocks} not divisible by grid dim {p}")
+    return nblocks // p
+
+
+def grid_from_devices(n_devices: int) -> Tuple[int, int]:
+    """Largest P=Q square grid using all devices (paper requires P=Q for the
+    circuit-switched PTRANS/HPL)."""
+    p = int(np.floor(np.sqrt(n_devices)))
+    while p > 1 and n_devices % p:
+        p -= 1
+    return p, n_devices // p

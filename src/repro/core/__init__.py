@@ -1,0 +1,4 @@
+"""HPCC-JAX: the paper's benchmark suite. Importing registers all benchmarks."""
+from repro.core import beff, fft, gemm, hpl, hpl_blocked, ptrans  # noqa: F401
+from repro.core import randomaccess, stream  # noqa: F401
+from repro.core.hpcc import BenchResult, get_benchmark, list_benchmarks  # noqa: F401

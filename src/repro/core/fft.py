@@ -1,0 +1,43 @@
+"""FFT — batched 1-D FFTs (paper legacy suite).
+
+Embarrassingly parallel over devices; uses XLA's FFT (the paper's FFT kernel
+is a legacy single-device design it did not modify; DESIGN.md §9 records why
+no Pallas radix kernel is warranted). Metric: 5 N log2 N FLOPs per 1-D FFT.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.types import CommunicationType
+from repro.core.hpcc import BenchResult, register, timeit
+
+
+@register("fft")
+def run_fft(mesh, comm=CommunicationType.ICI_DIRECT, *, log_size: int = 12,
+            batch_per_device: int = 64, reps: int = 3) -> BenchResult:
+    n_dev = mesh.devices.size
+    n = 1 << log_size
+    batch = batch_per_device * n_dev
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.normal(key, (batch, n), jnp.float32)
+         + 1j * jax.random.normal(jax.random.PRNGKey(1), (batch, n), jnp.float32))
+    x = jax.device_put(x.astype(jnp.complex64), NamedSharding(mesh, P("x", None)))
+
+    fn = jax.jit(shard_map(lambda a: jnp.fft.fft(a, axis=-1), mesh=mesh,
+                           in_specs=P("x", None), out_specs=P("x", None)))
+    out, t = timeit(fn, x, reps=reps)
+
+    ref = np.fft.fft(np.asarray(x[:2]), axis=-1)
+    err = float(np.max(np.abs(np.asarray(out[:2]) - ref)) / np.max(np.abs(ref)))
+
+    flops = 5.0 * n * math.log2(n) * batch
+    return BenchResult(
+        name="fft", metric_name="GFLOP/s", metric=flops / t / 1e9, error=err,
+        times={"best": t},
+        details={"log_size": log_size, "batch": batch, "devices": n_dev})

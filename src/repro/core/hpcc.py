@@ -1,0 +1,61 @@
+"""HPCC-JAX suite registry — the paper's Fig. 1 host architecture.
+
+Every benchmark registers a ``run_*`` entry point that accepts a
+``CommunicationType`` (and where meaningful a ``schedule``) and returns a
+:class:`BenchResult`. The suite mirrors HPCC FPGA v0.5.1 + this paper's
+additions: STREAM, RandomAccess, FFT, GEMM (legacy, multi-device), and
+b_eff, PTRANS, LINPACK (new, communication-centric).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+
+
+@dataclass
+class BenchResult:
+    name: str
+    metric_name: str
+    metric: float
+    error: float = 0.0
+    times: Dict[str, float] = field(default_factory=dict)
+    details: Dict[str, object] = field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"{self.name},{self.metric_name},{self.metric:.6g},"
+                f"err={self.error:.3g}")
+
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_benchmark(name: str) -> Callable:
+    return _REGISTRY[name]
+
+
+def list_benchmarks():
+    return sorted(_REGISTRY)
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> tuple:
+    """Best-of-reps wall time (paper: slowest rank per rep via barrier, best
+    rep for the metric; single-process here, so plain best-of)."""
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return out, best

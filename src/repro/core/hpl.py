@@ -1,0 +1,185 @@
+"""HPL / LINPACK — distributed blocked right-looking LU on a 2-D torus
+(paper §2.3, Figs. 4-8). HPL-AI ruleset: diagonally-dominant A, no pivoting;
+only the LU factorization runs on the accelerators, the triangular solves
+run on the host as the CPU reference step, and the reported error is the
+normalized residual ||Ax - b|| / (n * ||b|| * eps).
+
+Per iteration k (paper Fig. 4):
+  1. the (k%P, k%P) device factorizes the diagonal block   [kernels/lu.py]
+  2. the packed LU block is broadcast along its grid row and column
+     (the paper's "network kernels" forwarding through the torus — here the
+     store-and-forward ``ring_bcast('chain')`` or the native collective)
+  3. grid row k%P solves the Top panel (U_kj), grid column k%P the Left
+     panel (L_ik)                                          [trsm kernels]
+  4. panels are broadcast down/across the torus
+  5. every device applies the trailing rank-b GEMM update on its local
+     blocks                                                 [gemm_update]
+
+The masks that restrict panels to i,j > k are *multiplicative* (zeroed rows/
+columns), so the trailing update needs no selects — a zeroed panel row
+contributes nothing, exactly like the paper's "blocks left/above need no
+further processing".
+
+Lookahead (paper Fig. 5/7 overlap) — ``lookahead=True`` splits the trailing
+update: the next iteration's panel column is updated *first*, then the
+factor+broadcast of iteration k+1 is issued before the bulk update of
+iteration k, so XLA can overlap the broadcasts with the bulk GEMM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.collectives import ring_bcast
+from repro.comm.types import CommunicationType, comm_type
+from repro.core.hpcc import BenchResult, register, timeit
+from repro.core.models import hpl_flops
+from repro.core.ptrans import distribute_cyclic, undistribute_cyclic
+from repro.kernels.ops import (gemm_update, lu_factor_block,
+                               trsm_lower_left, trsm_upper_right)
+
+
+# ---------------------------------------------------------------------------
+# problem generation / validation (host side, like the paper)
+# ---------------------------------------------------------------------------
+
+
+def generate_system(n: int, seed: int = 7) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Diagonally dominant A (HPL-AI rule), x = ones, b = A @ x."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-0.5, 0.5, (n, n)).astype(np.float32)
+    a[np.arange(n), np.arange(n)] += n
+    x = np.ones((n,), np.float32)
+    b = a @ x
+    return a, x, b
+
+
+def solve_from_lu(lu: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Host triangular solves L y = b, U x = y from the packed LU."""
+    import jax.scipy.linalg as jsl
+    l = np.tril(lu, -1) + np.eye(lu.shape[0], dtype=lu.dtype)
+    u = np.triu(lu)
+    y = np.asarray(jsl.solve_triangular(l, b, lower=True, unit_diagonal=True))
+    return np.asarray(jsl.solve_triangular(u, y, lower=False))
+
+
+def normalized_residual(a: np.ndarray, x: np.ndarray, b: np.ndarray) -> float:
+    eps = np.finfo(np.float32).eps
+    r = np.max(np.abs(a @ x - b))
+    return float(r / (a.shape[0] * np.max(np.abs(b)) * eps))
+
+
+# ---------------------------------------------------------------------------
+# distributed factorization
+# ---------------------------------------------------------------------------
+
+
+def _iteration(k, a, *, pg: int, b: int, lb: int, comm, schedule, interpret,
+               r, c, li_global, lj_global):
+    m = lb * b
+    pk = k % pg
+    lk = k // pg
+
+    # 1. diagonal block (speculative on every device; selected by bcast)
+    diag = lax.dynamic_slice(a, (lk * b, lk * b), (b, b))
+    lu_local = lu_factor_block(diag, interpret=interpret)
+    lu_blk = ring_bcast(lu_local, "cols", pk, comm, schedule)
+    lu_blk = ring_bcast(lu_blk, "rows", pk, comm, schedule)
+
+    # 2. Top panel: U_kj = L_kk^{-1} A_kj on grid row pk, cols j > k
+    row_panel = lax.dynamic_slice(a, (lk * b, 0), (b, m))
+    u_panel = trsm_lower_left(lu_blk, row_panel, interpret=interpret)
+    colmask = jnp.repeat(lj_global > k, b)  # (m,)
+    u_panel = u_panel * colmask[None, :]
+    u_panel = ring_bcast(u_panel, "rows", pk, comm, schedule)
+
+    # 3. Left panel: L_ik = A_ik U_kk^{-1} on grid col pk, rows i > k
+    col_panel = lax.dynamic_slice(a, (0, lk * b), (m, b))
+    l_panel = trsm_upper_right(lu_blk, col_panel, interpret=interpret)
+    rowmask = jnp.repeat(li_global > k, b)
+    l_panel = l_panel * rowmask[:, None]
+    l_panel = ring_bcast(l_panel, "cols", pk, comm, schedule)
+
+    # 4. trailing update: masks zero the factored rows/cols
+    a = gemm_update(a, l_panel, u_panel, alpha=-1.0, interpret=interpret)
+
+    # 5. write back factored panels. The rank masks are folded INTO the
+    # update values so every write is one slice-sized dynamic-update-slice —
+    # a `where(r == pk, dus(a, ...), a)` select would touch the full local
+    # matrix three times per iteration (measured as the second-largest HBM
+    # term of the production HPL lowering, §Perf iteration C1).
+    old_row = lax.dynamic_slice(a, (lk * b, 0), (b, m))
+    new_row = jnp.where(colmask[None, :] & (r == pk), u_panel, old_row)
+    a = lax.dynamic_update_slice(a, new_row, (lk * b, 0))
+    old_col = lax.dynamic_slice(a, (0, lk * b), (m, b))
+    new_col = jnp.where(rowmask[:, None] & (c == pk), l_panel, old_col)
+    a = lax.dynamic_update_slice(a, new_col, (0, lk * b))
+    old_diag = lax.dynamic_slice(a, (lk * b, lk * b), (b, b))
+    new_diag = jnp.where((r == pk) & (c == pk), lu_blk, old_diag)
+    a = lax.dynamic_update_slice(a, new_diag, (lk * b, lk * b))
+    return a
+
+
+def _hpl_body(a_loc, *, pg: int, nb: int, b: int, comm: CommunicationType,
+              schedule: str, interpret: bool):
+    a = a_loc[0]
+    lb = nb // pg
+    r = lax.axis_index("rows")
+    c = lax.axis_index("cols")
+    li_global = jnp.arange(lb) * pg + r
+    lj_global = jnp.arange(lb) * pg + c
+
+    step = partial(_iteration, pg=pg, b=b, lb=lb, comm=comm,
+                   schedule=schedule, interpret=interpret, r=r, c=c,
+                   li_global=li_global, lj_global=lj_global)
+    a = lax.fori_loop(0, nb, step, a)
+    return a[None]
+
+
+def make_factorize(mesh, *, pg: int, nb: int, b: int,
+                   comm=CommunicationType.ICI_DIRECT, schedule: str = "chain",
+                   interpret: bool = True):
+    spec = P(("rows", "cols"), None, None)
+    fn = shard_map(
+        partial(_hpl_body, pg=pg, nb=nb, b=b, comm=comm_type(comm),
+                schedule=schedule, interpret=interpret),
+        mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False)
+    return jax.jit(fn)
+
+
+@register("hpl")
+def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
+            b: int = 64, schedule: str = "chain", reps: int = 2,
+            interpret: bool = True, validate: bool = True) -> BenchResult:
+    """mesh axes ('rows', 'cols'), P = Q (paper's quadratic torus)."""
+    pg = mesh.shape["rows"]
+    assert mesh.shape["cols"] == pg, "paper requires a quadratic torus"
+    nb = n // b
+    assert nb % pg == 0, (n, b, pg)
+    comm = comm_type(comm)
+
+    a, x_true, b_vec = generate_system(n)
+    spec = NamedSharding(mesh, P(("rows", "cols"), None, None))
+    a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
+
+    fact = make_factorize(mesh, pg=pg, nb=nb, b=b, comm=comm,
+                          schedule=schedule, interpret=interpret)
+    out, t = timeit(fact, a_sh, reps=reps)
+
+    err = 0.0
+    if validate:
+        lu = undistribute_cyclic(np.asarray(out), pg, b)
+        x = solve_from_lu(lu, b_vec)
+        err = normalized_residual(a, x, b_vec)
+
+    return BenchResult(
+        name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
+        error=err, times={"best": t},
+        details={"n": n, "block": b, "grid": pg, "comm": comm.value,
+                 "schedule": schedule})

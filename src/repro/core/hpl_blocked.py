@@ -1,0 +1,62 @@
+"""Single-device blocked right-looking LU (paper Fig. 13's per-FPGA sweep).
+
+Same kernels as the distributed HPL, no communication: used for the
+matrix-size performance sweep, for unit tests, and as the measured
+single-device curve that feeds the strong-scaling extrapolation model
+(paper Fig. 15)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hpcc import BenchResult, register, timeit
+from repro.core.hpl import generate_system, normalized_residual, solve_from_lu
+from repro.core.models import hpl_flops
+from repro.kernels.ops import (gemm_update, lu_factor_block,
+                               trsm_lower_left, trsm_upper_right)
+
+
+def lu_blocked(a: jnp.ndarray, b: int, *, interpret: bool = True) -> jnp.ndarray:
+    """In-place style blocked LU of (n, n) ``a`` with block size ``b``;
+    returns packed L\\U. Python loop over diagonal blocks (static unroll)."""
+    n = a.shape[0]
+    nb = n // b
+    for k in range(nb):
+        o = k * b
+        lu = lu_factor_block(jax.lax.dynamic_slice(a, (o, o), (b, b)),
+                             interpret=interpret)
+        a = jax.lax.dynamic_update_slice(a, lu, (o, o))
+        rest = n - o - b
+        if rest:
+            row = jax.lax.dynamic_slice(a, (o, o + b), (b, rest))
+            u = trsm_lower_left(lu, row, interpret=interpret)
+            a = jax.lax.dynamic_update_slice(a, u, (o, o + b))
+            col = jax.lax.dynamic_slice(a, (o + b, o), (rest, b))
+            l = trsm_upper_right(lu, col, interpret=interpret)
+            a = jax.lax.dynamic_update_slice(a, l, (o + b, o))
+            trail = jax.lax.dynamic_slice(a, (o + b, o + b), (rest, rest))
+            trail = gemm_update(trail, l, u, alpha=-1.0, interpret=interpret)
+            a = jax.lax.dynamic_update_slice(a, trail, (o + b, o + b))
+    return a
+
+
+@register("hpl_single")
+def run_hpl_single(mesh=None, comm=None, *, n: int = 512, b: int = 64,
+                   reps: int = 2, interpret: bool = True,
+                   validate: bool = True) -> BenchResult:
+    a, x_true, b_vec = generate_system(n)
+    a_dev = jnp.asarray(a)
+    fn = jax.jit(partial(lu_blocked, b=b, interpret=interpret))
+    out, t = timeit(fn, a_dev, reps=reps)
+
+    err = 0.0
+    if validate:
+        x = solve_from_lu(np.asarray(out), b_vec)
+        err = normalized_residual(a, x, b_vec)
+
+    return BenchResult(
+        name="hpl_single", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
+        error=err, times={"best": t}, details={"n": n, "block": b})

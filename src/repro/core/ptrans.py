@@ -1,0 +1,129 @@
+"""PTRANS — distributed matrix transposition C = B + A^T (paper §2.2).
+
+Blocks are distributed block-cyclically over a P x P grid (the paper's PQ
+scheme, Fig. 3, with P = Q as the circuit-switched implementation requires).
+Each device stores its local blocks packed into one (lb*b, lb*b) matrix;
+because the distribution is symmetric, the *entire* communication is a
+single exchange with the grid-transpose partner, and the local compute is
+one full-matrix transpose-add — tile(lj,li)^T lands at (li,lj) for both the
+block index level and the within-block level at once.
+
+Backends:
+* ICI_DIRECT — one ``ppermute`` over ('rows','cols') with the transpose
+  permutation: a pure point-to-point circuit-switched exchange (paper
+  §2.2.2).
+* HOST_STAGED — all_gather over the full grid + local selection: every block
+  transits the staging domain (paper §2.2.1 via PCIe+MPI).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.topology import transpose_perm
+from repro.comm.types import CommunicationType, comm_type
+from repro.core.hpcc import BenchResult, register, timeit
+from repro.kernels.ops import transpose_add
+
+
+# ---------------------------------------------------------------------------
+# block-cyclic (de)distribution — shared with HPL
+# ---------------------------------------------------------------------------
+
+
+def distribute_cyclic(mat: np.ndarray, pg: int, b: int) -> np.ndarray:
+    """(n, n) -> (pg*pg, m, m) stack of per-device local matrices. Global
+    block (I, J) -> device (I%P, J%P), local tile (I//P, J//P)."""
+    n = mat.shape[0]
+    nb = n // b
+    lb = nb // pg
+    m = lb * b
+    out = np.empty((pg * pg, m, m), mat.dtype)
+    for gi in range(nb):
+        for gj in range(nb):
+            dev = (gi % pg) * pg + (gj % pg)
+            li, lj = gi // pg, gj // pg
+            out[dev, li * b:(li + 1) * b, lj * b:(lj + 1) * b] = \
+                mat[gi * b:(gi + 1) * b, gj * b:(gj + 1) * b]
+    return out
+
+
+def undistribute_cyclic(shards: np.ndarray, pg: int, b: int) -> np.ndarray:
+    nshards, m, _ = shards.shape
+    lb = m // b
+    nb = lb * pg
+    n = nb * b
+    out = np.empty((n, n), shards.dtype)
+    for gi in range(nb):
+        for gj in range(nb):
+            dev = (gi % pg) * pg + (gj % pg)
+            li, lj = gi // pg, gj // pg
+            out[gi * b:(gi + 1) * b, gj * b:(gj + 1) * b] = \
+                shards[dev, li * b:(li + 1) * b, lj * b:(lj + 1) * b]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step
+# ---------------------------------------------------------------------------
+
+
+def _ptrans_body(a_loc, b_loc, *, pg: int, comm: CommunicationType,
+                 interpret: bool):
+    a_loc, b_loc = a_loc[0], b_loc[0]
+    if comm is CommunicationType.ICI_DIRECT:
+        recv = lax.ppermute(a_loc, ("rows", "cols"), transpose_perm(pg))
+    else:
+        g = lax.all_gather(a_loc, ("rows", "cols"))  # (P*P, m, m)
+        r = lax.axis_index("rows")
+        c = lax.axis_index("cols")
+        recv = jnp.squeeze(lax.dynamic_slice_in_dim(g, c * pg + r, 1, 0), 0)
+    out = transpose_add(recv, b_loc, interpret=interpret)
+    return out[None]
+
+
+def make_step(mesh, pg: int, comm: CommunicationType, interpret: bool = True):
+    spec = P(("rows", "cols"), None, None)
+    fn = shard_map(partial(_ptrans_body, pg=pg, comm=comm, interpret=interpret),
+                   mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+                   check_vma=False)
+    return jax.jit(fn)
+
+
+@register("ptrans")
+def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
+               b: int = 128, reps: int = 3, interpret: bool = True,
+               validate: bool = True) -> BenchResult:
+    """mesh must have axes ('rows', 'cols') with equal sizes (P = Q)."""
+    pg = mesh.shape["rows"]
+    assert mesh.shape["cols"] == pg, "paper requires P = Q"
+    comm = comm_type(comm)
+    rng = np.random.default_rng(42)
+    a = rng.standard_normal((n, n), dtype=np.float32)
+    bm = rng.standard_normal((n, n), dtype=np.float32)
+
+    spec = NamedSharding(mesh, P(("rows", "cols"), None, None))
+    a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
+    b_sh = jax.device_put(distribute_cyclic(bm, pg, b), spec)
+
+    step = make_step(mesh, pg, comm, interpret)
+    out, t = timeit(step, a_sh, b_sh, reps=reps)
+
+    err = 0.0
+    if validate:
+        c = undistribute_cyclic(np.asarray(out), pg, b)
+        ref = bm + a.T
+        err = float(np.max(np.abs(c - ref)))
+
+    flops = float(n) * n  # paper: n^2 additions
+    return BenchResult(
+        name="ptrans", metric_name="GFLOP/s", metric=flops / t / 1e9,
+        error=err, times={"best": t},
+        details={"n": n, "block": b, "grid": pg, "comm": comm.value,
+                 "bytes_exchanged": float(n) * n * 4})

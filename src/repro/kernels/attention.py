@@ -1,0 +1,107 @@
+"""Flash attention (prefill/train) Pallas kernel with GQA head mapping.
+
+Blockwise online-softmax attention: grid (batch*heads, q_blocks, kv_blocks),
+carries (acc, m, l) live in VMEM scratch across the kv_block dimension.
+Causal blocks strictly above the diagonal are skipped with ``pl.when`` — on
+TPU the grid still visits them but issues no MXU work, halving FLOPs for the
+causal case. Default blocks 512(q) x 512(kv) x 128(hd): q-tile + k-tile +
+v-tile + fp32 acc = 4 x 512 x 128 x ~4 B ~= 1.3 MiB << VMEM.
+
+The KV head for a q head h is h // (H/KV) — computed in the BlockSpec index
+map, so GQA costs no extra copies (the paper's NUM_REPLICATIONS analogue is
+the grid's batch*heads dimension).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  nk: int, bq: int, bk: int, causal: bool, scale: float,
+                  q_offset: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: the whole block is masked iff its first kv pos exceeds the
+    # last q pos of this q block.
+    needed = True
+    if causal:
+        needed = (j * bk) <= (q_offset + i * bq + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, q_offset: int = 0, bq: int = 512,
+                    bk: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    scale = hd ** -0.5
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+
+    def kv_row(bh):  # q row index -> kv row index
+        return (bh // H) * KV + (bh % H) // G
+
+    grid = (B * H, Sq // bq, Skv // bk)
+    out = pl.pallas_call(
+        partial(_flash_kernel, nk=grid[2], bq=bq, bk=bk, causal=causal,
+                scale=scale, q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, i, j: (kv_row(bh), j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, i, j: (kv_row(bh), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

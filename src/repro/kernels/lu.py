@@ -1,0 +1,142 @@
+"""Blocked-LU building blocks (Pallas TPU): the paper's four HPL kernels.
+
+Paper §2.3/Fig. 4 decomposes each iteration into: LU (diagonal block
+factorization), Top (U panel via lower-triangular solve), Left (L panel via
+upper-triangular solve, transposed on the fly), and the inner matrix
+multiplications (see kernels/gemm.py). No pivoting (HPL-AI ruleset,
+diagonally-dominant A).
+
+The diagonal factorization and the triangular solves are sequential over the
+block dimension — that is inherent to LU — but they touch O(b^2) data while
+the trailing GEMMs touch O(n^2) per iteration, so these kernels sit off the
+critical roofline for large n (paper Fig. 13: performance converges to the
+matmul bound).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# diagonal block: in-place LU (Doolittle, unit lower diagonal)
+# ---------------------------------------------------------------------------
+
+
+def _lu_block_kernel(a_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, a):
+        pivot = lax.dynamic_index_in_dim(lax.dynamic_index_in_dim(a, k, 0, False),
+                                         k, 0, False)
+        col = jnp.where(idx > k, a[:, k] / pivot, 0.0)  # L column below diag
+        row = lax.dynamic_index_in_dim(a, k, 0, False)  # a[k, :]
+        urow = jnp.where(idx > k, row, 0.0)             # U row right of diag
+        a = a - jnp.outer(col, urow)
+        a = a.at[:, k].set(jnp.where(idx > k, col, a[:, k]))
+        return a
+
+    a = lax.fori_loop(0, n, body, a)
+    o_ref[...] = a.astype(o_ref.dtype)
+
+
+def lu_factor_block(a: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """LU-factorize one (b, b) block, returning L\\U packed (unit L diag)."""
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    return pl.pallas_call(
+        _lu_block_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=interpret,
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# panel solves
+# ---------------------------------------------------------------------------
+
+
+def _trsm_lower_kernel(lu_ref, b_ref, o_ref):
+    """Solve L X = B where L is unit-lower from packed LU. One grid cell per
+    panel block (the paper's Top kernel: U_kj = L_kk^{-1} A_kj)."""
+    l = lu_ref[...].astype(jnp.float32)
+    x = b_ref[...].astype(jnp.float32)
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, x):
+        li = lax.dynamic_index_in_dim(l, i, 0, False)  # L[i, :]
+        li = jnp.where(idx < i, li, 0.0)
+        xi = lax.dynamic_index_in_dim(x, i, 0, False) - li @ x
+        return lax.dynamic_update_index_in_dim(x, xi, i, 0)
+
+    x = lax.fori_loop(0, n, body, x)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def trsm_lower_left(lu: jnp.ndarray, b: jnp.ndarray, *, bn: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """X = L^{-1} B for packed-LU ``lu`` (b, b) and panel ``b`` (b, N)."""
+    from repro.kernels.gemm import fit_block
+    n = lu.shape[0]
+    N = b.shape[1]
+    bn = fit_block(N, bn)
+    return pl.pallas_call(
+        _trsm_lower_kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=interpret,
+    )(lu, b)
+
+
+def _trsm_upper_kernel(lu_ref, b_ref, o_ref):
+    """Solve X U = B for U upper from packed LU (the paper's Left kernel:
+    L_ik = A_ik U_kk^{-1})."""
+    u = lu_ref[...].astype(jnp.float32)
+    x = b_ref[...].astype(jnp.float32)  # (bm, n)
+    n = u.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, x):
+        uj = lax.dynamic_slice_in_dim(u, j, 1, 1)[:, 0]  # U[:, j]
+        ujj = lax.dynamic_index_in_dim(uj, j, 0, False)
+        uj = jnp.where(idx < j, uj, 0.0)
+        xj = (lax.dynamic_slice_in_dim(x, j, 1, 1)[:, 0] - x @ uj) / ujj
+        return lax.dynamic_update_slice_in_dim(x, xj[:, None], j, 1)
+
+    x = lax.fori_loop(0, n, body, x)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def trsm_upper_right(lu: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """X = B U^{-1} for packed-LU ``lu`` (b, b) and panel ``b`` (M, b)."""
+    from repro.kernels.gemm import fit_block
+    n = lu.shape[0]
+    M = b.shape[0]
+    bm = fit_block(M, bm)
+    return pl.pallas_call(
+        _trsm_upper_kernel,
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=interpret,
+    )(lu, b)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the CPU reference the paper
+validates against on the host side)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b, out_dtype=None):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        out_dtype or a.dtype)
+
+
+def gemm_update(c, a, b, alpha=-1.0):
+    return (c.astype(jnp.float32)
+            + alpha * jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+            ).astype(c.dtype)
+
+
+def transpose_add(a, b):
+    return (b.astype(jnp.float32) + a.astype(jnp.float32).T).astype(b.dtype)
+
+
+def lu_factor_block(a):
+    """Packed L\\U (unit lower diag), no pivoting."""
+    a = a.astype(jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, a):
+        pivot = a[k, k]
+        col = jnp.where(idx > k, a[:, k] / pivot, 0.0)
+        urow = jnp.where(idx > k, a[k, :], 0.0)
+        a = a - jnp.outer(col, urow)
+        a = a.at[:, k].set(jnp.where(idx > k, col, a[:, k]))
+        return a
+
+    return jax.lax.fori_loop(0, n, body, a)
+
+
+def unpack_lu(lu):
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def trsm_lower_left(lu, b):
+    l, _ = unpack_lu(lu.astype(jnp.float32))
+    return jax.scipy.linalg.solve_triangular(
+        l, b.astype(jnp.float32), lower=True, unit_diagonal=True).astype(b.dtype)
+
+
+def trsm_upper_right(lu, b):
+    _, u = unpack_lu(lu.astype(jnp.float32))
+    # X U = B  <=>  U^T X^T = B^T
+    xt = jax.scipy.linalg.solve_triangular(
+        u.T, b.astype(jnp.float32).T, lower=True)
+    return xt.T.astype(b.dtype)
+
+
+def attention(q, k, v, *, causal=True, q_offset=0):
+    """Dense softmax attention with GQA. q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask = jnp.arange(Skv)[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def stream_copy(a):
+    return a
+
+
+def stream_scale(c, alpha):
+    return (alpha * c.astype(jnp.float32)).astype(c.dtype)
+
+
+def stream_add(a, b):
+    return (a.astype(jnp.float32) + b.astype(jnp.float32)).astype(a.dtype)
+
+
+def stream_triad(b, c, alpha):
+    return (b.astype(jnp.float32) + alpha * c.astype(jnp.float32)).astype(b.dtype)

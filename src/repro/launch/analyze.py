@@ -1,0 +1,166 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: attribute roofline terms to HLO instructions.
+
+``python -m repro.launch.analyze --arch qwen1.5-32b --shape decode_32k``
+
+Prints the top memory/collective/flop contributors with their loop
+multipliers and the ``op_name`` metadata (which names the jax source op) —
+this is the "profile" the §Perf hypothesis loop reads, in lieu of a
+wall-clock trace on real hardware.
+"""
+import argparse
+import re
+from typing import List
+
+import jax
+
+from repro import roofline as rl
+
+
+def attribute(hlo_text: str, top: int = 25):
+    comps = rl._split_computations(hlo_text)
+    instrs = {}
+    for cname, lines in comps.items():
+        t = {}
+        for line in lines:
+            ins = rl._parse_instr(line)
+            if ins:
+                t[ins.name] = ins
+        instrs[cname] = t
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else list(comps)[-1]
+
+    mem_contrib: List = []
+    coll_contrib: List = []
+    flop_contrib: List = []
+    stack = []
+
+    def op_meta(ins):
+        mm = re.search(r'op_name="([^"]+)"', ins.raw)
+        return mm.group(1)[-80:] if mm else ""
+
+    def operand_bytes(ins, table):
+        return sum(rl.shape_bytes(table[o].type_str)
+                   for o in ins.operands if o in table)
+
+    def visit(cname, mult, mem_level):
+        if cname not in instrs or cname in stack:
+            return
+        stack.append(cname)
+        table = instrs[cname]
+        for ins in table.values():
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if op == "dot":
+                f = rl._dot_flops(ins, table)
+                flop_contrib.append((f * mult, mult, cname, ins.type_str[:44],
+                                     op_meta(ins)))
+                if mem_level:
+                    sz = rl.shape_bytes(ins.type_str) + operand_bytes(ins, table)
+                    mem_contrib.append((sz * mult, mult, "dot",
+                                        ins.type_str[:44], op_meta(ins)))
+            elif base in rl.COLLECTIVE_OPS and not op.endswith("-done"):
+                sz = operand_bytes(ins, table) or rl.shape_bytes(ins.type_str)
+                n = rl._group_size(ins.raw)
+                wire = sz * rl._wire_factor(base, max(n, 2))
+                coll_contrib.append((wire * mult, mult, base,
+                                     ins.type_str[:44], op_meta(ins)))
+            elif op == "while":
+                mm2 = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.raw)
+                trips = int(mm2.group(1)) if mm2 else 1
+                b = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                if b:
+                    visit(b.group(1), mult * trips, mem_level)
+            elif op == "fusion":
+                mm2 = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+                if mem_level and mm2:
+                    fused = instrs.get(mm2.group(1), {})
+                    dus_b = None
+                    for i2 in fused.values():
+                        if i2.opcode == "dynamic-update-slice" and len(i2.operands) >= 2:
+                            upd = fused.get(i2.operands[1])
+                            if upd is not None:
+                                b2 = 2 * rl.shape_bytes(upd.type_str)
+                                dus_b = b2 if dus_b is None else max(dus_b, b2)
+                    conv_only = bool(fused) and all(
+                        i2.opcode in ("parameter", "convert", "copy", "bitcast",
+                                      "tuple", "get-tuple-element")
+                        for i2 in fused.values())
+                    if dus_b is not None:
+                        mem_contrib.append((dus_b * mult, mult, "fusion(dus)",
+                                            ins.type_str[:44], op_meta(ins)))
+                    elif not conv_only:
+                        sz = rl.shape_bytes(ins.type_str) + operand_bytes(ins, table)
+                        mem_contrib.append((sz * mult, mult, "fusion",
+                                            ins.type_str[:44], op_meta(ins)))
+                if mm2:
+                    visit(mm2.group(1), mult, False)
+            elif op in ("call", "conditional", "async-start"):
+                for attr in ("to_apply", "calls", "called_computations",
+                             "true_computation", "false_computation"):
+                    for mm2 in re.finditer(attr + r"=%?([\w.\-]+)", ins.raw):
+                        visit(mm2.group(1), mult, mem_level)
+            elif mem_level and op not in rl._TRAFFIC_SKIP:
+                if op in ("dynamic-slice", "gather"):
+                    sz = 2 * rl.shape_bytes(ins.type_str)
+                elif op == "dynamic-update-slice" and len(ins.operands) >= 2:
+                    upd = table.get(ins.operands[1])
+                    sz = 2 * rl.shape_bytes(upd.type_str) if upd else 0
+                elif op == "scatter" and len(ins.operands) >= 3:
+                    upd = table.get(ins.operands[2])
+                    sz = 2 * rl.shape_bytes(upd.type_str) if upd else 0
+                else:
+                    sz = rl.shape_bytes(ins.type_str) + operand_bytes(ins, table)
+                mem_contrib.append((sz * mult, mult, op, ins.type_str[:44],
+                                    op_meta(ins)))
+        stack.pop()
+
+    visit(entry, 1.0, True)
+
+    def show(title, contrib, unit, scale):
+        contrib.sort(reverse=True)
+        total = sum(c[0] for c in contrib)
+        print(f"\n=== {title}: total {total:.4g} {unit} "
+              f"({total/scale:.4g} s) ===")
+        for c in contrib[:top]:
+            print(f"  {c[0]:.3g}\tx{c[1]:<6.0f} {c[2]:<12s} {c[3]:<46s} {c[4]}")
+
+    show("HBM traffic", mem_contrib, "B", 819e9)
+    show("collective wire", coll_contrib, "B", 50e9)
+    show("dot FLOPs", flop_contrib, "FLOP", 197e12)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--dump", default=None, help="also write HLO text here")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    kw = {}
+    if args.fsdp is not None:
+        kw["fsdp"] = args.fsdp == "on"
+    fn, cell_args, in_sh, out_sh, donate = build_cell(args.arch, args.shape,
+                                                      mesh, **kw)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*cell_args).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+    attribute(text, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

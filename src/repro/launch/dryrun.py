@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the scale proof without hardware: ``jax.jit(step).lower(**specs)
+.compile()`` against the production mesh (16x16 single-pod / 2x16x16
+multi-pod on 512 placeholder CPU devices). A sharding mismatch, compile-time
+OOM, or unsupported collective here is a bug in the system, not in the
+hardware. The compiled artifact also yields the roofline inputs
+(cost_analysis + optimized-HLO collective bytes) recorded per cell under
+``results/dryrun/``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import roofline as rl
+from repro import sharding as sh
+from repro.configs import (SHAPES, cell_is_applicable, get_config, list_archs,
+                           shape_for)
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, build_model, input_specs
+from repro.train.step import (TrainState, init_train_state,
+                              make_train_step_fn, state_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cast_tree(tree, from_dtype, to_dtype):
+    def leaf(x):
+        if x.dtype == from_dtype:
+            return jax.ShapeDtypeStruct(x.shape, to_dtype)
+        return x
+    return jax.tree.map(leaf, tree)
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def abstract_state(model: Model):
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0)))
+
+
+def abstract_cache(model: Model, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# cell builders: (fn, example_args, in_shardings, out_shardings, donate)
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     run_cfg: Optional[RunConfig] = None, *, fsdp: bool = True):
+    model = build_model(cfg)
+    # microbatched gradient accumulation is the production default: it
+    # bounds the remat-saved activation working set (B_loc/8 per microbatch)
+    # so every train cell fits 16 GiB/device (llama3-8b: 61 -> 6.6 GiB temp)
+    run_cfg = run_cfg or RunConfig(remat="full", microbatches=8)
+    rules = sh.rules_for(mesh, fsdp=fsdp)
+
+    step = make_train_step_fn(model, run_cfg, mesh, fsdp=fsdp)
+    state = abstract_state(model)
+    batch = input_specs(cfg, shape.seq_len, shape.global_batch, "train")
+
+    st_specs = state_specs(state, rules, mesh, zero1=True)
+    b_specs = sh.batch_specs(batch, rules, mesh)
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    in_sh = (_named(st_specs, mesh), _named(b_specs, mesh))
+    out_sh = (_named(st_specs, mesh), _named(metrics_specs, mesh))
+    return step, (state, batch), in_sh, out_sh, (0,)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       *, fsdp: bool = True):
+    model = build_model(cfg)
+    rules = sh.rules_for(mesh, fsdp=fsdp)
+    shard = sh.make_shard_fn(mesh, rules)
+
+    def prefill(params, batch, cache):
+        logits, cache, _ = model.apply(params, batch, cache=cache, shard=shard)
+        return logits, cache
+
+    params = _cast_tree(abstract_params(model), jnp.float32, jnp.bfloat16)
+    batch = input_specs(cfg, shape.seq_len, shape.global_batch, "prefill")
+    cache = abstract_cache(model, shape.global_batch, shape.seq_len)
+
+    p_specs = sh.param_specs(params, rules, mesh)
+    b_specs = sh.batch_specs(batch, rules, mesh)
+    c_specs = sh.cache_specs(cache, rules, mesh)
+    V = cfg.padded_vocab()
+    logits_spec = P(rules.dp_spec, None,
+                    rules.tp if rules.tp and V % mesh.shape[rules.tp] == 0 else None)
+
+    in_sh = (_named(p_specs, mesh), _named(b_specs, mesh), _named(c_specs, mesh))
+    out_sh = (NamedSharding(mesh, logits_spec), _named(c_specs, mesh))
+    return prefill, (params, batch, cache), in_sh, out_sh, (2,)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      *, fsdp: bool = True):
+    model = build_model(cfg)
+    seq_shard = shape.global_batch == 1
+    rules = sh.rules_for(mesh, seq_shard=seq_shard, fsdp=fsdp)
+    shard = sh.make_shard_fn(mesh, rules)
+
+    def decode(params, batch, cache):
+        logits, cache, _ = model.apply(params, batch, cache=cache, shard=shard)
+        return logits, cache
+
+    params = _cast_tree(abstract_params(model), jnp.float32, jnp.bfloat16)
+    batch = input_specs(cfg, shape.seq_len, shape.global_batch, "decode")
+    cache = abstract_cache(model, shape.global_batch, shape.seq_len)
+    # decode enters with a full cache: pos = seq_len - 1
+    B = shape.global_batch
+
+    p_specs = sh.param_specs(params, rules, mesh)
+    b_specs = sh.batch_specs(batch, rules, mesh)
+    c_specs = sh.cache_specs(cache, rules, mesh, seq_shard=seq_shard)
+    V = cfg.padded_vocab()
+    dp_ok = B % sh._axsize(mesh, rules.dp_spec) == 0
+    logits_spec = P(rules.dp_spec if dp_ok else None, None,
+                    rules.tp if rules.tp and V % mesh.shape[rules.tp] == 0 else None)
+
+    in_sh = (_named(p_specs, mesh), _named(b_specs, mesh), _named(c_specs, mesh))
+    out_sh = (NamedSharding(mesh, logits_spec), _named(c_specs, mesh))
+    return decode, (params, batch, cache), in_sh, out_sh, (2,)
+
+
+def build_cell(arch: str, shape_name: str, mesh, **kw):
+    cfg = get_config(arch)
+    shape = shape_for(shape_name)
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, **kw)
+    return build_decode_cell(cfg, shape, mesh, **kw)
+
+
+class SkipCell(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# lower + compile + analyse
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             fsdp: Optional[bool] = None, verbose: bool = True,
+             mesh_shape: Optional[Tuple[int, int]] = None) -> Dict:
+    """``mesh_shape`` overrides the (data, model) split of the 256-chip pod —
+    the serving-topology knob (paper: 'the network topology is set up before
+    running the benchmarks')."""
+    if mesh_shape is not None:
+        import jax as _jax
+        mesh = _jax.make_mesh(tuple(mesh_shape), ("data", "model"),
+                              axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    shape = shape_for(shape_name)
+    kw = {}
+    if fsdp is not None:
+        kw["fsdp"] = fsdp
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(arch, shape_name, mesh, **kw)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+
+    mflops = rl.model_flops_for(cfg, shape.kind, shape.global_batch,
+                                shape.seq_len)
+    hlo_text = compiled.as_text()
+    terms = rl.from_compiled(compiled, chips=chips, model_flops=mflops,
+                             hlo_text=hlo_text)
+
+    # bytes-per-device of the step's resident state (args are sharded)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "kind": shape.kind, "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "flops_per_device": terms.flops,
+        "hbm_bytes_per_device": terms.hbm_bytes,
+        "collective_operand_bytes": terms.coll_operand_bytes,
+        "collective_wire_bytes": terms.coll_wire_bytes,
+        "per_op_bytes": terms.details["per_op_bytes"],
+        "collective_count": terms.details["collective_count"],
+        "unresolved_loops": terms.details["unresolved_loops"],
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "model_flops": mflops,
+        "useful_ratio": terms.useful_ratio,
+        "step_s": terms.step_s,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}] compiled in "
+              f"{t_compile:.1f}s -> {terms.row()}")
+        if mem_rec:
+            print("  memory:", {k: f"{v/2**30:.2f}GiB" for k, v in mem_rec.items()
+                                if "size" in k})
+    return record
+
+
+def cell_list(mesh_kind: str):
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            yield arch, shape_name, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = [(a, s, m) for m in meshes for a, s, _ in cell_list(m)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape_name, mesh_kind in cells:
+        tag = f"{arch}__{shape_name}__{mesh_kind}".replace("/", "_")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip cached] {tag}")
+            continue
+        try:
+            fsdp = None if args.fsdp is None else (args.fsdp == "on")
+            rec = run_cell(arch, shape_name, mesh_kind, fsdp=fsdp)
+        except SkipCell as e:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "skipped", "reason": str(e)}
+            print(f"[skipped] {tag}: {e}")
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures += 1
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[FAILED] {tag}: {type(e).__name__}: {e}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

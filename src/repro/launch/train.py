@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant loop (repro.train.loop) on the local devices with a
+reduced or full config. On a real cluster each host runs this same entry
+point under ``jax.distributed.initialize`` (the mesh helper and data pipeline
+are already multi-host safe: batches are pure functions of (seed, step,
+shard) and checkpoint writes are per-shard).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import RunConfig, get_config, list_archs, reduced
+from repro.data import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.train.loop import TrainLoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="train the reduced same-family config (CPU-sized)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--comm", default="ici_direct",
+                    choices=["ici_direct", "host_staged"])
+    ap.add_argument("--mesh", action="store_true",
+                    help="use a (data, model) mesh over local devices")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    run = RunConfig(comm_type=args.comm, microbatches=args.microbatches,
+                    remat=args.remat, learning_rate=args.lr,
+                    warmup_steps=max(args.steps // 10, 1),
+                    checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=args.checkpoint_every)
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch,
+                      seq_len=args.seq)
+    mesh = make_local_mesh() if args.mesh else None
+
+    hist = train_loop(cfg, run, data, TrainLoopConfig(steps=args.steps),
+                      mesh=mesh)
+    print(f"final loss {hist['loss'][-1]:.4f} "
+          f"(first {hist['loss'][0]:.4f}); "
+          f"median step {sorted(hist['step_time'])[len(hist['step_time'])//2]:.3f}s")
+    print("straggler summary:", hist["straggler"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Decode-state containers: KV caches for attention layers, conv+SSD state
+for SSM layers. Stored stacked per scan position-group (leading n_super dim)
+so the layer scan can thread them as xs/ys."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import ssm_dims
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, kv, hd), dtype),
+    }
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d_in, H, P, G, N = ssm_dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * G * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

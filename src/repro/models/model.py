@@ -1,0 +1,115 @@
+"""Family dispatch: one uniform Model API over all assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` with ``init / apply /
+init_cache / loss`` closures, so the trainer, server, dry-run, and tests
+never branch on family.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.transformer import Shard, _noshard
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    apply: Callable  # (params, batch, cache=None, shard=..., remat=...) -> (logits, cache, aux)
+    init_cache: Callable
+
+
+def _decoder_apply(cfg):
+    def apply(params, batch, *, cache=None, shard=_noshard, remat="none"):
+        return transformer.apply(
+            params, cfg, batch["tokens"], cache=cache,
+            patch_embeds=batch.get("patch_embeds"), shard=shard, remat=remat)
+    return apply
+
+
+def _encdec_apply(cfg):
+    def apply(params, batch, *, cache=None, shard=_noshard, remat="none"):
+        return encdec.apply(params, cfg, batch["tokens"],
+                            frames=batch.get("frames"), cache=cache,
+                            shard=shard, remat=remat)
+    return apply
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            apply=_encdec_apply(cfg),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                encdec.init_cache(cfg, batch, max_seq, dtype),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        apply=_decoder_apply(cfg),
+        init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+            transformer.init_cache(cfg, batch, max_seq, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+                    z_loss: float = 1e-4) -> jnp.ndarray:
+    """Shifted next-token cross entropy (+ z-loss), mean over valid positions.
+
+    logits: (B, S, V); tokens: (B, S). Position t predicts token t+1.
+
+    Partition-friendly: the target logit is extracted with a masked reduction
+    over the vocab dim (not ``take_along_axis``), so vocab-sharded logits
+    (tensor-parallel head) never get all-gathered — GSPMD turns both the
+    logsumexp and the masked sum into shard-local reductions + psum.
+    """
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    tgt_logit = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                        axis=-1)
+    nll = lse - tgt_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) — used by dry-run
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    train:   full-sequence tokens (+ modality inputs).
+    prefill: same tokens, no labels (cache is created inside serve_step).
+    decode:  one new token; the KV cache of length ``seq_len`` is part of the
+             step state, not the input specs (see launch/dryrun.py).
+    """
+    B = global_batch
+    S = 1 if kind == "decode" else seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.vision_dim), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    if cfg.is_encoder_decoder and kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.audio_ctx, cfg.d_model), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    return specs

@@ -1,0 +1,176 @@
+"""Mixture-of-Experts layer with capacity-based scatter dispatch.
+
+Dispatch is *scatter-based* (GShard-style capacity, MegaBlocks-style index
+routing): tokens are routed into an (experts, capacity, d_model) buffer with
+positions computed by a cumulative count — NO dense one-hot dispatch einsum.
+This keeps compiled HLO FLOPs proportional to *active* compute (top-k), which
+matters for the MODEL_FLOPS/HLO_FLOPs roofline ratio (EXPERIMENTS.md).
+
+Sharding intent under pjit (see repro/sharding.py):
+  tokens  (B, S, D)   : B -> ('pod','data')
+  experts (E, D, F)   : E -> 'model'  (expert parallelism)
+  dispatch buffer (B, E, C, D): B -> data, E -> model  (GSPMD inserts the
+  expert all-to-all-equivalent resharding; the explicit shard_map all_to_all
+  schedule lives in repro/comm and is used by the optimized path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = 0.02
+    p = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * std,
+        "w_gate": jax.random.normal(k2, (e, d, f), jnp.float32) * std,
+        "w_in": jax.random.normal(k3, (e, d, f), jnp.float32) * std,
+        "w_out": jax.random.normal(k4, (e, f, d), jnp.float32)
+        * (std / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.shared_expert:
+        ks = jax.random.split(k5, 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks[0], (d, f), jnp.float32) * std,
+            "w_in": jax.random.normal(ks[1], (d, f), jnp.float32) * std,
+            "w_out": jax.random.normal(ks[2], (f, d), jnp.float32)
+            * (std / math.sqrt(2 * cfg.num_layers)),
+        }
+    return p
+
+
+def _capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(math.ceil(seq * cfg.num_experts_per_tok * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(c, 1)
+
+
+def route(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Router: returns (probs (B,S,k), ids (B,S,k)); probs renormalized over top-k."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    top_logits, ids = jax.lax.top_k(logits, cfg.num_experts_per_tok)
+    probs = jax.nn.softmax(top_logits, axis=-1)
+    return probs, ids
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+              aux: Optional[dict] = None, shard=None) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D). Per-batch-row dispatch groups.
+
+    ``shard`` (optional activation-constraint callback) pins the dispatch
+    buffer to P(dp, tp, None, None) — expert-parallel over the model axis —
+    and the gathered-back tokens to P(dp, None, None). Without the
+    constraints GSPMD lowers the scatter/gather through full-tensor fp32
+    all-reduces (measured 16 GB wire per MoE layer on qwen3-moe prefill,
+    §Perf iteration A1).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(cfg, S)
+    dtype = x.dtype
+    shard = shard or (lambda v, _name: v)
+
+    probs, ids = route(p, cfg, x)  # (B,S,K)
+
+    # --- position within expert via cumulative count (no dense one-hot matmul)
+    # onehot counts: (B, S, K, E) int8 is avoided; compute cumsum over flat (S*K)
+    flat_ids = ids.reshape(B, S * K)  # (B, T)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (B, T, E) -- adds only
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot  # exclusive cumsum
+    pos = jnp.take_along_axis(
+        pos_in_expert, flat_ids[..., None], axis=-1)[..., 0]  # (B, T)
+    keep = pos < C  # capacity drop mask
+
+    # --- scatter tokens into (B, E, C, D)
+    tok = jnp.repeat(x, K, axis=1).reshape(B, S * K, D)  # each token K times
+    # clamp dropped slots to a scratch position (C) then slice off
+    e_idx = flat_ids
+    c_idx = jnp.where(keep, pos, C)
+    tok = shard(tok, "moe_tokens")  # keep D sharded entering the all-to-all
+
+    # vmap the scatters over the batch row: a 3-dim advanced-index scatter
+    # hides batch-locality from GSPMD (it all-gathers the dp dim, measured
+    # §Perf iteration A1c); per-row scatters keep batch a clean mapped dim.
+    def _dispatch_row(tok_row, e_row, c_row):
+        return jnp.zeros((E, C + 1, D), dtype).at[e_row, c_row].set(
+            tok_row, mode="drop")
+
+    buf = jax.vmap(_dispatch_row)(tok.astype(dtype), e_idx, c_idx)
+    buf = shard(buf[:, :, :C], "moe_buf")  # (B, E, C, D), E over 'model'
+
+    # --- expert FFN (SwiGLU), experts sharded over 'model'
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dtype))
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(dtype))
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * h, p["w_out"].astype(dtype))
+    y = shard(y, "moe_buf")
+
+    # --- combine: weight in expert layout, then SCATTER-ADD back to tokens.
+    # A fancy-index gather from the E-sharded buffer lowers to an all-reduce
+    # of the (B, S*K, D) output — K x more wire than needed. Scatter-add sums
+    # the K expert contributions shard-locally before the cross-device
+    # reduction, so the payload is (B, S, D/tp) once (§Perf iteration A1).
+    w = probs.reshape(B, S * K) * keep  # (B, T) f32
+    s_idx = jnp.arange(S * K) // K      # slot -> destination token
+
+    def _weights_row(w_row, e_row, c_row):
+        return jnp.zeros((E, C + 1), jnp.float32).at[e_row, c_row].set(
+            w_row, mode="drop")
+
+    def _tokens_row(e_row, c_row):
+        return jnp.full((E, C + 1), S, jnp.int32).at[e_row, c_row].set(
+            s_idx, mode="drop")
+
+    def _combine_row(yw_row, tok_row):
+        return jnp.zeros((S, D), jnp.float32).at[tok_row].add(
+            yw_row, mode="drop")
+
+    w_buf = jax.vmap(_weights_row)(w, e_idx, c_idx)
+    y_w = y.astype(jnp.float32) * w_buf[:, :, :C, None]  # (B, E, C, D) f32
+    tok_buf = jax.vmap(_tokens_row)(e_idx, c_idx)
+    out = jax.vmap(_combine_row)(y_w.reshape(B, E * C, D),
+                                 tok_buf[:, :, :C].reshape(B, E * C))
+    out = shard(out, "moe_tokens").astype(dtype)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(dtype))
+        sh = jnp.einsum("bsd,df->bsf", x, sp["w_in"].astype(dtype))
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(sg) * sh,
+                               sp["w_out"].astype(dtype))
+    if aux is not None:
+        # load-balance metrics (Switch aux loss terms), fp32
+        onehot_f = onehot.astype(jnp.float32)
+        frac_tokens = onehot_f.mean(axis=(0, 1))  # (E,)
+        aux["moe_frac_tokens"] = frac_tokens
+        aux["moe_dropped"] = 1.0 - keep.astype(jnp.float32).mean()
+    return out
+
+
+def reference_moe(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: dense loop over experts, no capacity drop. For tests with
+    capacity_factor large enough that apply_moe drops nothing."""
+    B, S, D = x.shape
+    probs, ids = route(p, cfg, x)
+    out = jnp.zeros((B, S, D), jnp.float32)
+    for e in range(cfg.num_experts):
+        w_e = ((ids == e).astype(jnp.float32) * probs).sum(axis=-1)  # (B,S)
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"][e].astype(x.dtype))
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"][e].astype(x.dtype))
+        y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * h, p["w_out"][e].astype(x.dtype))
+        out = out + y.astype(jnp.float32) * w_e[..., None]
+    out = out.astype(x.dtype)
+    if cfg.shared_expert:
+        sp = p["shared"]
+        sg = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(x.dtype))
+        sh = jnp.einsum("bsd,df->bsf", x, sp["w_in"].astype(x.dtype))
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(sg) * sh,
+                               sp["w_out"].astype(x.dtype))
+    return out

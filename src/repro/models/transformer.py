@@ -1,0 +1,241 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are applied as a ``lax.scan`` over *super-blocks*: the layer pattern of
+every assigned arch is periodic (jamba: attention every 8th layer, MoE every
+2nd; maverick: MoE every 2nd; vision: cross-attn every 5th), so we stack the
+parameters of each position-in-period across super-blocks and trace the body
+once. This keeps the lowered HLO (and compile time on the 512-device dry-run
+mesh) independent of depth.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.kvcache import attn_cache_spec, ssm_cache_spec
+
+Shard = Callable[[jnp.ndarray, str], jnp.ndarray]
+_noshard: Shard = lambda x, name: x
+
+
+def period_of(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = math.lcm(p, cfg.attn_every)
+    if cfg.has_moe:
+        p = math.lcm(p, cfg.moe_every)
+    if cfg.cross_attn_every:
+        p = math.lcm(p, cfg.cross_attn_every)
+    if cfg.num_layers % p:
+        raise ValueError(f"num_layers={cfg.num_layers} not divisible by period={p}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, has_moe: bool, has_cross: bool) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict = {"ln1": L.init_rmsnorm(cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = SSM.init_ssm(ks[0], cfg)
+    if has_cross:
+        p["cross_ln"] = L.init_rmsnorm(cfg.d_model)
+        p["cross_attn"] = L.init_attention(ks[1], cfg, kv_in_dim=cfg.d_model)
+        p["cross_gate"] = jnp.zeros((), jnp.float32)  # llama-vision gated cross-attn
+    if has_moe:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.num_layers)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    period = period_of(cfg)
+    n_super = cfg.num_layers // period
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    cross_mask = cfg.cross_attn_mask()
+
+    k_embed, k_blocks, k_vlm = jax.random.split(key, 3)
+    V = cfg.padded_vocab()
+    params: Dict = {
+        "embed": jax.random.normal(k_embed, (V, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "blocks": {},
+    }
+    pkeys = jax.random.split(k_blocks, period)
+    for p_idx in range(period):
+        init_fn = partial(_init_layer, cfg=cfg, kind=kinds[p_idx],
+                          has_moe=moe_mask[p_idx], has_cross=cross_mask[p_idx])
+        lkeys = jax.random.split(pkeys[p_idx], n_super)
+        params["blocks"][f"p{p_idx}"] = jax.vmap(init_fn)(lkeys)
+    if cfg.family == "vlm":
+        params["vlm"] = {
+            "patch_proj": jax.random.normal(
+                k_vlm, (cfg.vision_dim, cfg.d_model), jnp.float32) * 0.02,
+            "patch_norm": L.init_rmsnorm(cfg.d_model),
+        }
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Dict:
+    period = period_of(cfg)
+    n_super = cfg.num_layers // period
+    kinds = cfg.layer_kinds()
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), tree)
+
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32), "layers": {}}
+    for p_idx in range(period):
+        if kinds[p_idx] == "attn":
+            spec = attn_cache_spec(cfg, batch, max_seq, dtype)
+        else:
+            spec = ssm_cache_spec(cfg, batch, dtype)
+        cache["layers"][f"p{p_idx}"] = stack(spec)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp: Dict, cfg: ModelConfig, x, *, kind: str, has_moe: bool,
+                 has_cross: bool, cache, pos, cross_kv, shard: Shard,
+                 aux: Optional[dict]):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        a, new_cache = L.apply_attention(lp["attn"], cfg, h, cache=cache,
+                                         pos=pos, shard=shard)
+    else:
+        a, new_cache = SSM.apply_ssm(lp["ssm"], cfg, h, cache=cache, pos=pos)
+    x = shard(x + a, "residual")
+
+    if has_cross and cross_kv is not None:
+        h = L.rmsnorm(x, lp["cross_ln"], cfg.norm_eps)
+        c, _ = L.apply_attention(lp["cross_attn"], cfg, h, kv_x=cross_kv,
+                                 causal=False, use_rope=False)
+        x = shard(x + jnp.tanh(lp["cross_gate"]).astype(x.dtype) * c, "residual")
+
+    if has_moe:
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = shard(x + MOE.apply_moe(lp["moe"], cfg, h, aux=aux, shard=shard),
+                  "residual")
+    elif cfg.d_ff:
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = shard(x + L.apply_mlp(lp["mlp"], h), "residual")
+    return x, new_cache
+
+
+def apply(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) int32
+    *,
+    cache: Optional[Dict] = None,
+    patch_embeds: Optional[jnp.ndarray] = None,  # vlm: (B, P, vision_dim)
+    shard: Shard = _noshard,
+    remat: str = "none",
+    collect_aux: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict], Optional[Dict]]:
+    """Returns (logits, new_cache, aux).
+
+    train:   cache=None                  -> logits (B, S, V)
+    prefill: cache at pos 0              -> logits (B, S, V), cache filled
+    decode:  cache with pos>0, S == 1    -> logits (B, 1, V), cache advanced
+    """
+    period = period_of(cfg)
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    cross_mask = cfg.cross_attn_mask()
+    dtype = jnp.dtype(cfg.dtype)
+
+    x = params["embed"].astype(dtype)[tokens]
+    x = shard(x, "residual")
+
+    cross_kv = None
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = jnp.einsum("bpv,vd->bpd", patch_embeds.astype(dtype),
+                        params["vlm"]["patch_proj"].astype(dtype))
+        cross_kv = L.rmsnorm(pe, params["vlm"]["patch_norm"], cfg.norm_eps)
+
+    pos = None
+    is_decode = False
+    if cache is not None:
+        pos = cache["pos"]
+        is_decode = tokens.shape[1] == 1
+        if not is_decode:
+            pos = None  # prefill writes from 0
+
+    def superblock(x, xs):
+        lps, lcaches = xs
+        new_caches = {}
+        for p_idx in range(period):
+            kp = f"p{p_idx}"
+            x, nc = _apply_layer(
+                lps[kp], cfg, x, kind=kinds[p_idx], has_moe=moe_mask[p_idx],
+                has_cross=cross_mask[p_idx],
+                cache=lcaches[kp] if lcaches is not None else None,
+                pos=pos, cross_kv=cross_kv, shard=shard, aux=None)
+            new_caches[kp] = nc if nc is not None else ()
+        return x, new_caches
+
+    body = superblock
+    if remat == "full" and not is_decode:
+        body = jax.checkpoint(superblock)
+    elif remat == "dots" and not is_decode:
+        body = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    layer_caches = cache["layers"] if cache is not None else None
+    x, new_layer_caches = jax.lax.scan(
+        body, x, (params["blocks"], layer_caches))
+
+    if is_decode:
+        # Decode cache merge (§Perf iteration B2): the scan emitted only
+        # token-sized k/v updates as ys; every layer writes the same ``pos``,
+        # so ONE dynamic-update-slice per cache buffer commits them all.
+        # HBM writes stay O(new tokens) instead of O(cache) — the scan reads
+        # the (donated) stacked cache via xs slicing, which is the decode
+        # read floor, and XLA needs no defensive whole-stack copies.
+        merged = {}
+        for kp, stacked in cache["layers"].items():
+            upd = new_layer_caches[kp]
+            m = dict(stacked)
+            for name, val in upd.items():
+                if name in ("k_upd", "v_upd"):
+                    m[name[0]] = jax.lax.dynamic_update_slice(
+                        stacked[name[0]], val, (0, 0, pos, 0, 0))
+                else:
+                    m[name] = val.astype(stacked[name].dtype)
+            merged[kp] = m
+        new_layer_caches = merged
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x = shard(x, "residual")
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dtype))
+    logits = shard(logits, "logits")
+
+    new_cache = None
+    if cache is not None:
+        seq = tokens.shape[1]
+        new_cache = {"pos": cache["pos"] + seq, "layers": new_layer_caches}
+    aux = {} if collect_aux else None
+    return logits, new_cache, aux

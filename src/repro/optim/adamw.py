@@ -1,0 +1,84 @@
+"""AdamW with fp32 master moments, decoupled weight decay, global-norm clip.
+
+Written against plain pytrees (no optax dependency). The moments inherit the
+parameter sharding and — under ZeRO-1 (see :func:`repro.sharding.
+opt_state_specs`) — are additionally sharded over the data-parallel axes,
+so optimizer memory scales down with DP size like the paper's per-device
+matrix blocks scale with the torus size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[object, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads, state: Dict, params, cfg: AdamWConfig,
+                 lr: jnp.ndarray) -> Tuple[object, Dict]:
+    """Returns (new_params, new_state). grads/params fp32 leaves."""
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def moment1(m, g):
+        return cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32)
+
+    def moment2(v, g):
+        g = g.astype(jnp.float32)
+        return cfg.b2 * v + (1 - cfg.b2) * g * g
+
+    mu = jax.tree.map(moment1, state["mu"], grads)
+    nu = jax.tree.map(moment2, state["nu"], grads)
+
+    def step(p, m, v):
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(step, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}
+
+
+def make_lr_schedule(base_lr: float, warmup_steps: int,
+                     total_steps: int = 10_000, min_ratio: float = 0.1) -> Callable:
+    """Linear warmup + cosine decay to min_ratio * base_lr."""
+    def schedule(step) -> jnp.ndarray:
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps)
+                            / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+    return schedule

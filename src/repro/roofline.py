@@ -1,0 +1,527 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+    compute_s    = HLO_FLOPs(per device) / peak_FLOP/s
+    memory_s     = HLO_bytes(per device) / HBM_bw
+    collective_s = collective_wire_bytes(per device) / ICI_link_bw
+
+``compiled.cost_analysis()`` reports the per-device SPMD program (XLA
+compiles ONE program that every device runs), so terms divide by per-chip
+peaks — algebraically identical to the assignment's
+``total / (chips x peak)`` form.
+
+**Why a custom HLO parser instead of cost_analysis alone:** XLA's
+cost_analysis counts a ``while`` body *once*, but every step function here
+scans over layers (and fori_loops over HPL iterations), so FLOPs/bytes would
+be undercounted by ~num_layers x. :func:`analyze_hlo` walks the optimized
+HLO (``compiled.as_text()``), recovers loop trip counts from the canonical
+XLA counter pattern in loop conditions, and multiplies through. It
+computes:
+
+* **flops** — 2 x result_elems x contracted_size for every ``dot`` (matmul
+  FLOPs dominate every workload here; elementwise flops are ignored and the
+  convention is recorded in EXPERIMENTS.md);
+* **hbm traffic** — operand + result bytes of every *memory-level* op
+  (top-level in ENTRY / loop bodies / branches; fusion internals live in
+  registers/VMEM and are not HBM traffic);
+* **collective bytes** — operand sizes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute / collective-broadcast
+  (and async -start forms), plus ring-factor wire-byte estimates
+  (all-reduce 2(n-1)/n, gather/scatter/all-to-all (n-1)/n, permute 1x)
+  using the replica-group size of each op.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.comm.types import TPU_V5E, HardwareModel
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*[a-z0-9]*)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_TRAFFIC_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+    # dtype converts: XLA:CPU materializes them, XLA:TPU feeds the MXU/VPU
+    # datapath directly — consumers count the (converted) operand reads.
+    "convert",
+}
+
+# Interpret-mode Pallas kernels appear as plain HLO loops whose op_name
+# metadata carries the jitted wrapper name (repro/kernels/ops.py). Inside a
+# kernel region only the BlockSpec-level block fetches (dynamic-slice) and
+# commits (dynamic-update-slice) are HBM traffic — everything else lives in
+# VMEM on the real TPU. This is a conservative model: interpret mode
+# re-fetches blocks that real Pallas pipelining would keep resident.
+_KERNEL_REGION_RE = re.compile(
+    r"jit\((?:flash_attention|matmul|gemm_update|transpose_add|"
+    r"lu_factor_block|trsm_lower_left|trsm_upper_right|stream_[a-z]+)\)/")
+
+
+def _in_kernel_region(raw: str) -> bool:
+    m = re.search(r'op_name="([^"]+)"', raw)
+    return bool(m and _KERNEL_REGION_RE.search(m.group(1)))
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string (tuples sum)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return int(total)
+
+
+def shape_dims(type_str: str) -> List[int]:
+    """Dims of the FIRST array shape in a type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+    is_root: bool = False
+
+
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> instruction lines. A header is a top-level line
+    ending in '{' whose name is followed by a parameter list (which may
+    itself contain tuple parens)."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+                m = _HEADER_RE.match(line)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        comps[current].append(line)
+    return comps
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i >= n:
+        return None
+    # --- type: either a (tuple, ...) with balanced parens or an array type
+    if line[i] == "(":
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    j += 1
+                    break
+            j += 1
+        type_str = line[i:j]
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+    # --- opcode: token between type and the '(' of the operand list
+    k = line.find("(", j)
+    if k < 0:
+        return None
+    opcode = line[j:k].strip()
+    if not opcode or not re.fullmatch(r"[a-z][\w\-]*", opcode):
+        return None
+    # --- operands: comma-split at depth 1 inside the call parens
+    depth = 1
+    args: List[str] = []
+    buf = ""
+    for ch in line[k + 1:]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append(buf)
+                break
+        if depth >= 1 and ch != ")":
+            if ch == "," and depth == 1:
+                args.append(buf)
+                buf = ""
+            else:
+                buf += ch
+    operands = []
+    for a in args:
+        mm = re.search(r"%([\w.\-]+)", a)
+        if mm:
+            operands.append(mm.group(1))
+    return _Instr(name=name, type_str=type_str.strip(), opcode=opcode,
+                  operands=operands, raw=line,
+                  is_root=line.lstrip().startswith("ROOT "))
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    if "source_target_pairs=" in line:
+        return 2
+    return 0
+
+
+def _wire_factor(opcode: str, n: int) -> float:
+    if n <= 1:
+        return 0.0 if not opcode.startswith("collective-permute") else 1.0
+    if opcode.startswith("all-reduce"):
+        return 2.0 * (n - 1) / n
+    if opcode.startswith(("all-gather", "reduce-scatter", "all-to-all")):
+        return (n - 1) / n
+    return 1.0
+
+
+def _dot_flops(ins: _Instr, table: Dict[str, _Instr]) -> float:
+    """2 x result_elems x contracted_size for a dot instruction."""
+    out_dims = shape_dims(ins.type_str)
+    out_elems = math.prod(out_dims) if out_dims else 0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    csize = 1
+    if m and ins.operands:
+        lhs = table.get(ins.operands[0])
+        if lhs is not None:
+            ldims = shape_dims(lhs.type_str)
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    csize *= ldims[int(idx)]
+    return 2.0 * out_elems * csize
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0                  # dot flops, loop-expanded, per device
+    hbm_bytes: float = 0.0              # memory-level op traffic, loop-expanded
+    operand_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: float = 0.0
+    collective_count: int = 0
+    unresolved_loops: int = 0
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    comps = _split_computations(hlo_text)
+    instrs: Dict[str, Dict[str, _Instr]] = {}
+    for cname, lines in comps.items():
+        table = {}
+        for line in lines:
+            ins = _parse_instr(line)
+            if ins:
+                table[ins.name] = ins
+        instrs[cname] = table
+
+    def trip_count(cond_comp: str) -> Optional[int]:
+        table = instrs.get(cond_comp, {})
+        for ins in table.values():
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", ins.raw)
+                if m:
+                    return int(m.group(1))
+        return None
+
+    stats = HloStats()
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else (list(comps)[-1] if comps else None)
+    if entry not in comps:
+        entry = list(comps)[-1] if comps else None
+    if entry is None:
+        return stats
+
+    stack: List[str] = []
+    _kernel_comp_cache: Dict[str, bool] = {}
+
+    def kernel_comp(cname: str) -> bool:
+        """A computation is kernel-internal if any instruction carries a
+        Pallas-kernel op_name (the interpret-mode grid loop's own copies and
+        slices don't carry it, but the kernel body ops do)."""
+        if cname not in _kernel_comp_cache:
+            _kernel_comp_cache[cname] = any(
+                _in_kernel_region(i.raw) for i in instrs.get(cname, {}).values())
+        return _kernel_comp_cache[cname]
+
+    def root_of(cname: str) -> Optional[_Instr]:
+        for ins in instrs.get(cname, {}).values():
+            if ins.is_root:
+                return ins
+        return None
+
+    def operand_bytes_of(ins: _Instr, table) -> int:
+        size = 0
+        for o in ins.operands:
+            src = table.get(o)
+            if src is not None:
+                size += shape_bytes(src.type_str)
+        return size
+
+    _CONVERT_ONLY = {"parameter", "convert", "copy", "bitcast", "tuple",
+                     "get-tuple-element"}
+
+    def fusion_dus_bytes(fused: str, fusion_type: str) -> Optional[int]:
+        """If the fused computation updates a buffer of the fusion's own
+        result type via dynamic-update-slice (the scan-carry / KV-cache
+        write pattern — in-place on TPU), return 2 x update-slice bytes."""
+        best = None
+        for ins in instrs.get(fused, {}).values():
+            if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+                upd = instrs[fused].get(ins.operands[1])
+                if upd is not None:
+                    b = 2 * shape_bytes(upd.type_str)
+                    best = b if best is None else max(best, b)
+        return best
+
+    def is_pure_convert(fused: str) -> bool:
+        """kLoop fusions that only change dtype/layout-free copy: on TPU the
+        convert happens in the consumer's datapath (MXU eats bf16), so this
+        is not HBM traffic — XLA:CPU materializes it, XLA:TPU fuses it."""
+        table = instrs.get(fused, {})
+        return bool(table) and all(i.opcode in _CONVERT_ONLY
+                                   for i in table.values())
+
+    def visit(cname: str, mult: float, memory_level: bool,
+              in_kernel: bool = False):
+        if cname not in instrs or cname in stack:
+            return
+        stack.append(cname)
+        table = instrs[cname]
+        in_kernel = in_kernel or kernel_comp(cname)
+        for ins in table.values():
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if op == "dot":
+                stats.flops += _dot_flops(ins, table) * mult
+                if memory_level and not in_kernel:
+                    stats.hbm_bytes += (shape_bytes(ins.type_str)
+                                        + operand_bytes_of(ins, table)) * mult
+                continue
+            if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                size = 0
+                for o in ins.operands:
+                    src = table.get(o)
+                    if src is not None:
+                        size += shape_bytes(src.type_str)
+                if size == 0:
+                    size = shape_bytes(ins.type_str)
+                stats.operand_bytes[base] = stats.operand_bytes.get(base, 0.0) \
+                    + size * mult
+                n = _group_size(ins.raw)
+                stats.wire_bytes += size * mult * _wire_factor(base, max(n, 2))
+                stats.collective_count += 1
+                continue
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                # XLA records the analyzed trip count in backend_config
+                mm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.raw)
+                trips = int(mm.group(1)) if mm else None
+                if trips is None:  # fall back to the condition constant
+                    cond = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                    trips = trip_count(cond.group(1)) if cond else None
+                if trips is None:
+                    trips = 1
+                    stats.unresolved_loops += 1
+                if body:
+                    visit(body.group(1), mult * trips, memory_level, in_kernel)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for attr in ("to_apply", "calls", "called_computations",
+                             "true_computation", "false_computation",
+                             "branch_computations"):
+                    for mm in re.finditer(attr + r"=%?([\w.\-]+)", ins.raw):
+                        visit(mm.group(1), mult, memory_level, in_kernel)
+                continue
+            if op == "fusion":
+                # HBM traffic at the fusion boundary; dots inside still count.
+                # In-place fusions (containing a dynamic-update-slice on a
+                # buffer of the fusion's result type — KV-cache / scan-carry /
+                # grad-accumulation writes) touch only the updated slice, not
+                # the full aliased buffer. Pure-convert fusions are an
+                # XLA:CPU artifact (TPU converts in the consumer datapath).
+                mm = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+                ik = in_kernel or _in_kernel_region(ins.raw)
+                if memory_level and mm:
+                    dus_b = fusion_dus_bytes(mm.group(1), ins.type_str)
+                    if dus_b is not None:
+                        stats.hbm_bytes += (dus_b // (2 if ik else 1)) * mult
+                    elif is_pure_convert(mm.group(1)) or ik:
+                        pass
+                    else:
+                        stats.hbm_bytes += (shape_bytes(ins.type_str)
+                                            + operand_bytes_of(ins, table)) * mult
+                elif memory_level and not ik:
+                    stats.hbm_bytes += (shape_bytes(ins.type_str)
+                                        + operand_bytes_of(ins, table)) * mult
+                if mm:
+                    visit(mm.group(1), mult, False, ik)
+                continue
+            if memory_level and op not in _TRAFFIC_SKIP:
+                ik = in_kernel or _in_kernel_region(ins.raw)
+                if op == "dynamic-slice":
+                    factor = 1 if ik else 2  # kernel: HBM read only
+                    stats.hbm_bytes += factor * shape_bytes(ins.type_str) * mult
+                elif op == "dynamic-update-slice" and len(ins.operands) >= 2:
+                    upd = table.get(ins.operands[1])
+                    if upd is not None:
+                        factor = 1 if ik else 2
+                        stats.hbm_bytes += factor * shape_bytes(upd.type_str) \
+                            * mult
+                elif ik:
+                    pass  # VMEM-resident kernel body op
+                elif op == "gather":
+                    stats.hbm_bytes += 2 * shape_bytes(ins.type_str) * mult
+                elif op == "scatter" and len(ins.operands) >= 3:
+                    upd = table.get(ins.operands[2])
+                    if upd is not None:
+                        stats.hbm_bytes += 2 * shape_bytes(upd.type_str) * mult
+                else:
+                    stats.hbm_bytes += (shape_bytes(ins.type_str)
+                                        + operand_bytes_of(ins, table)) * mult
+        stack.pop()
+
+    visit(entry, 1.0, True)
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> HloStats:
+    """Collective payload summary (subset view of :func:`analyze_hlo`)."""
+    return analyze_hlo(hlo_text)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops (parsed, loop-expanded)
+    hbm_bytes: float             # per-device HBM traffic
+    coll_operand_bytes: float
+    coll_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0    # MODEL_FLOPS / (HLO_FLOPs * chips)
+    step_s: float = 0.0          # max of the three terms (no-overlap bound)
+    details: Dict = field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"compute {self.compute_s:.4g}s | memory {self.memory_s:.4g}s"
+                f" | collective {self.collective_s:.4g}s -> {self.dominant}"
+                f" (useful {self.useful_ratio:.2%})")
+
+
+def from_compiled(compiled, *, chips: int, hw: HardwareModel = TPU_V5E,
+                  model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms from a compiled executable (per-device convention)."""
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = analyze_hlo(text)
+
+    cost = {}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception:  # backend without cost analysis
+        cost = {}
+
+    return from_stats(stats, chips=chips, hw=hw, model_flops=model_flops,
+                      cost=cost)
+
+
+def from_stats(stats: HloStats, *, chips: int, hw: HardwareModel = TPU_V5E,
+               model_flops: float = 0.0, cost: Optional[dict] = None) -> Roofline:
+    compute_s = stats.flops / hw.peak_flops
+    memory_s = stats.hbm_bytes / hw.hbm_bw
+    collective_s = stats.wire_bytes / hw.ici_link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / (stats.flops * chips) if stats.flops else 0.0
+    details = {
+        "per_op_bytes": stats.operand_bytes,
+        "collective_count": stats.collective_count,
+        "unresolved_loops": stats.unresolved_loops,
+    }
+    if cost:
+        details["cost_analysis_flops"] = float(cost.get("flops", 0.0))
+        details["cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        flops=stats.flops, hbm_bytes=stats.hbm_bytes,
+        coll_operand_bytes=stats.total_operand_bytes,
+        coll_wire_bytes=stats.wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        step_s=max(terms.values()), details=details)
+
+
+def model_flops_for(cfg, kind: str, global_batch: int, seq_len: int) -> float:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N*D (forward-only), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * global_batch * seq_len
+    return 2.0 * n_active * global_batch

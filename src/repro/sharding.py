@@ -1,0 +1,327 @@
+"""Sharding rules: logical names -> mesh PartitionSpecs.
+
+The production mesh has axes ``('data', 'model')`` (single pod, 16x16) or
+``('pod', 'data', 'model')`` (multi-pod, 2x16x16). Data parallelism runs over
+``pod x data`` (the ``pod`` axis is the host-staged/DCN domain — exactly the
+paper's PCIe+MPI network — while ``data`` and ``model`` ride the
+circuit-switched ICI torus). Tensor/expert parallelism runs over ``model``.
+
+Rules are *divisibility-aware*: a dimension is only sharded when the mesh
+axis size divides it (GQA KV heads with kv < tp stay replicated, exactly
+like Megatron's KV replication; SSM head-count dims that don't divide stay
+replicated — they are tiny).
+
+Every rule function takes the concrete mesh so specs can be turned into
+``NamedSharding`` directly; ``make_shard_fn`` returns the activation-
+constraint callback threaded through the model code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    dp: Tuple[str, ...]          # data-parallel mesh axes, e.g. ('pod', 'data')
+    tp: str = "model"            # tensor/expert-parallel axis
+    sp: Optional[str] = None     # sequence-shard axis for long-context decode
+    fsdp: bool = False           # additionally shard params over dp (ZeRO-3)
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def rules_for(mesh: Mesh, *, seq_shard: bool = False,
+              fsdp: bool = False) -> MeshRules:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    if not dp:
+        dp = (names[0],)
+    if "model" in names:
+        tp = "model"
+    else:  # no named model axis: TP over the last axis not already used for DP
+        spare = [a for a in names if a not in dp]
+        tp = spare[-1] if spare else None
+    return MeshRules(dp=dp, tp=tp,
+                     sp=("data" if seq_shard and "data" in names else None),
+                     fsdp=fsdp)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(dim: int, axes, mesh: Mesh):
+    """Return the axes if they evenly divide ``dim``, else None (replicate)."""
+    if axes is None or dim % _axsize(mesh, axes):
+        return None
+    return axes if not (isinstance(axes, tuple) and len(axes) == 1) else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (the ``shard`` callback threaded through the model)
+# ---------------------------------------------------------------------------
+
+
+def activation_spec(name: str, rules: MeshRules) -> P:
+    dp = rules.dp_spec
+    if name == "residual":      # (B, S, D)
+        return P(dp, rules.sp, None)
+    if name == "logits":        # (B, S, V) — vocab stays sharded until the loss
+        return P(dp, rules.sp, rules.tp)
+    if name == "ffn":           # (B, S, F)
+        return P(dp, rules.sp, rules.tp)
+    if name == "heads":         # (B, S, H, hd)
+        return P(dp, rules.sp, rules.tp, None)
+    if name == "moe_buf":       # (B, E, C, D) — expert-parallel dispatch
+        return P(dp, rules.tp, None, None)
+    if name == "moe_tokens":    # (B, T/S, D) — token-side views stay D-sharded
+        return P(dp, None, rules.tp)
+    return P()
+
+
+def make_shard_fn(mesh: Mesh, rules: MeshRules) -> Callable:
+    def shard(x: jnp.ndarray, name: str) -> jnp.ndarray:
+        spec = activation_spec(name, rules)
+        if all(s is None for s in spec):
+            return x
+        # drop constraint entries for dims the spec cannot legally shard
+        fixed = []
+        for d, s in zip(x.shape, spec):
+            fixed.append(s if s is not None and d % _axsize(mesh, s) == 0 else None)
+        # pad spec to rank
+        fixed += [None] * (x.ndim - len(fixed))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+    # model code inspects these to build shard_map-wrapped Pallas kernels
+    shard.mesh = mesh
+    shard.rules = rules
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (name-based rules over the param pytree)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...], rules: MeshRules,
+               mesh: Mesh) -> P:
+    """Partition rule for one parameter leaf.
+
+    ``path`` is the tuple of dict keys; block params carry a leading scan
+    (super-block) dim that is never sharded.
+    """
+    tp, dp = rules.tp, rules.dp_spec
+    name = path[-1]
+    in_blocks = bool(path) and path[0] in ("blocks", "enc_blocks", "dec_blocks")
+    parent = path[-2] if len(path) >= 2 else ""
+
+    # strip the scan dim for rule matching; re-prepend at the end
+    core = shape[1:] if in_blocks else shape
+    lead = (None,) if in_blocks else ()
+
+    def out(*axes):
+        axes = tuple(axes) + (None,) * (len(core) - len(axes))
+        return P(*(lead + axes))
+
+    if name == "embed":                             # (V, D) vocab-parallel
+        return out(_maybe(core[0], tp, mesh))
+    if name == "wq":                                # (D, H, hd) heads sharded
+        return out(None, _maybe(core[1], tp, mesh))
+    if name in ("wk", "wv"):                        # (Din, KV, hd) if kv % tp
+        return out(None, _maybe(core[1], tp, mesh))
+    if name == "wo":                                # (H, hd, D)
+        return out(_maybe(core[0], tp, mesh))
+    if name == "bq":                                # (H, hd)
+        return out(_maybe(core[0], tp, mesh))
+    if name in ("bk", "bv"):                        # (KV, hd)
+        return out(_maybe(core[0], tp, mesh))
+    if parent == "moe":
+        if name == "router":                        # (D, E)
+            return out(None, _maybe(core[1], tp, mesh))
+        if name in ("w_gate", "w_in", "w_out"):     # (E, D, F) / (E, F, D): EP
+            return out(_maybe(core[0], tp, mesh))
+    if name in ("w_gate", "w_in"):                  # (D, F) mlp/shared
+        return out(None, _maybe(core[1], tp, mesh))
+    if name == "w_out":                             # (F, D)
+        return out(_maybe(core[0], tp, mesh))
+    if parent == "ssm":
+        if name in ("in_x", "in_z"):                # (D, d_in): channel-shard
+            return out(None, _maybe(core[1], tp, mesh))
+        if name in ("conv_x",):                     # (k, d_in)
+            return out(None, _maybe(core[1], tp, mesh))
+        if name in ("conv_x_b", "norm"):            # (d_in,)
+            return out(_maybe(core[0], tp, mesh))
+        if name == "out_proj":                      # (d_in, D)
+            return out(_maybe(core[0], tp, mesh))
+        # in_bc, in_dt, conv_bc, A_log, D, dt_bias: small, replicate
+        return out()
+    if name == "patch_proj":                        # (vision_dim, D)
+        return out()
+    # norms / scalars / anything unmatched: replicated
+    return out()
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for e in path:
+        if hasattr(e, "key"):
+            keys.append(str(e.key))
+        elif hasattr(e, "idx"):
+            keys.append(str(e.idx))
+        else:
+            keys.append(str(e))
+    return tuple(keys)
+
+
+def param_specs(params, rules: MeshRules, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params`` (arrays or ShapeDtypeStruct).
+
+    With ``rules.fsdp`` the name-based TP spec is extended by sharding the
+    largest remaining unsharded dim over the dp axes (fully-sharded /
+    ZeRO-3 weights; GSPMD all-gathers them per layer at use sites — the
+    standard scheme for the 100B+ assigned archs whose weights cannot live
+    TP-sharded-only on a 16 GB chip).
+    """
+    def leaf(path, x):
+        keys = _path_keys(path)
+        spec = _leaf_spec(keys, x.shape, rules, mesh)
+        if rules.fsdp:
+            in_blocks = bool(keys) and keys[0] in ("blocks", "enc_blocks",
+                                                   "dec_blocks")
+            spec = zero1_spec(spec, x.shape, rules, mesh, skip_first=in_blocks)
+        return spec
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def param_shardings(params, rules: MeshRules, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, rules, mesh))
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state specs (ZeRO-1: moments additionally sharded over dp)
+# ---------------------------------------------------------------------------
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], rules: MeshRules, mesh: Mesh,
+               *, skip_first: bool = False) -> P:
+    """Extend a param spec by sharding the largest unsharded dim over dp.
+
+    Used for optimizer-state (ZeRO-1) sharding and — via ``rules.fsdp`` —
+    for fully-sharded weights (ZeRO-3). ``skip_first`` protects the layer-
+    scan stack dim of block params (sharding it would make every scan slice
+    a cross-dp gather).
+    """
+    dp = rules.dp_spec
+    dpn = _axsize(mesh, dp)
+    if dpn == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dp_axes = set(dp) if isinstance(dp, tuple) else {dp}
+    for e in entries:  # already dp-sharded (e.g. fsdp params): no-op
+        es = set(e) if isinstance(e, tuple) else {e}
+        if es & dp_axes:
+            return spec
+    best, best_dim = -1, -1
+    for i, (s, d) in enumerate(zip(entries, shape)):
+        if skip_first and i == 0:
+            continue
+        if s is None and d % dpn == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best < 0:
+        return spec
+    entries[best] = dp
+    return P(*entries)
+
+
+def opt_state_specs(params, rules: MeshRules, mesh: Mesh, *, zero1: bool = True):
+    pspecs = param_specs(params, rules, mesh)
+    if not zero1:
+        return pspecs
+    return jax.tree.map(
+        lambda spec, p: zero1_spec(spec, p.shape, rules, mesh), pspecs, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch, rules: MeshRules, mesh: Mesh) -> Dict[str, P]:
+    """Shard every batch input's leading (batch) dim over dp when divisible."""
+    dp = rules.dp_spec
+    out = {}
+    for k, v in batch.items():
+        ax = _maybe(v.shape[0], dp, mesh)
+        out[k] = P(*((ax,) + (None,) * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cache, rules: MeshRules, mesh: Mesh, *, seq_shard: bool = False,
+                kv_fallback: str = "hd"):
+    """KV/SSM cache specs. Attention cache leaves are (n_super, B, Smax, KV,
+    hd): batch-shard over dp; KV heads over tp when divisible, otherwise the
+    *sequence* dim shards over tp (flash-decoding style — GSPMD inserts the
+    partial-softmax combine). For B=1 long-context cells (``seq_shard``) the
+    sequence dim additionally shards over 'data'.
+    SSM state leaves (n_super, B, nh, hd, N): batch over dp, heads over tp."""
+    dp, tp = rules.dp_spec, rules.tp
+
+    def leaf(path, x):
+        if x.ndim == 0:
+            return P()
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        if name in ("k", "v") and x.ndim == 5:       # attn: (L, B, S, KV, hd)
+            b_ax = _maybe(x.shape[1], dp, mesh)
+            kv_ax = _maybe(x.shape[3], tp, mesh)
+            hd_ax = None
+            s_axes = []
+            if kv_ax is None and tp is not None:
+                # kv heads don't divide tp. 'hd' (default): shard head_dim —
+                # a dynamic-pos cache update on a sharded seq dim lowers to
+                # full-shard masked writes (measured: the dominant HBM term
+                # of every decode cell, §Perf iteration B1); hd-sharding
+                # keeps updates slice-sized and costs only a psum over the
+                # contracted dim. 'seq' (the pre-B1 baseline, kept for
+                # ablation) shards the sequence dim instead.
+                if kv_fallback == "hd":
+                    hd_ax = _maybe(x.shape[4], tp, mesh)
+                else:
+                    s_axes.append(tp)
+            if seq_shard and b_ax is None and "data" in mesh.axis_names:
+                s_axes.append("data")
+            s_ax = _maybe(x.shape[2], tuple(s_axes), mesh) if s_axes else None
+            return P(None, b_ax, s_ax, kv_ax, hd_ax)
+        if name == "state" and x.ndim == 5:          # ssm: (L, B, nh, hd, N)
+            return P(None, _maybe(x.shape[1], dp, mesh),
+                     _maybe(x.shape[2], tp, mesh), None, None)
+        if name.startswith("conv") and x.ndim == 4:  # ssm conv: (L, B, k, d_in)
+            return P(None, _maybe(x.shape[1], dp, mesh), None,
+                     _maybe(x.shape[3], tp, mesh))
+        if name == "encoder_out":                    # enc-dec: (B, T, D)
+            return P(_maybe(x.shape[0], dp, mesh), None, None)
+        if x.ndim >= 2:                              # generic (L, B, ...) leaf
+            return P(None, _maybe(x.shape[1], dp, mesh))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train.serve import make_prefill_step, make_decode_step, generate  # noqa: F401
+from repro.train.straggler import StragglerMonitor  # noqa: F401
+from repro.train.loop import TrainLoopConfig, train_loop  # noqa: F401

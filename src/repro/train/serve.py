@@ -1,0 +1,87 @@
+"""Serving steps: prefill + decode with a sharded KV/SSM cache.
+
+``serve_step`` for the dry-run lowers one decode token against a cache of
+``seq_len`` (the assigned decode_*/long_* cells). ``generate`` is a small
+batched greedy/temperature sampler driving the two jitted steps — the
+"batched requests" server of deliverable (b).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, mesh: Optional[Mesh] = None) -> Callable:
+    """(params, batch, cache) -> (logits, cache). Writes positions [0, S)."""
+    shard = sh.make_shard_fn(mesh, sh.rules_for(mesh)) if mesh is not None \
+        else (lambda x, _: x)
+
+    def prefill(params, batch, cache):
+        logits, cache, _ = model.apply(params, batch, cache=cache, shard=shard)
+        return logits, cache
+
+    return jax.jit(prefill, donate_argnums=(2,))
+
+
+def make_decode_step(model: Model, mesh: Optional[Mesh] = None,
+                     *, seq_shard: bool = False) -> Callable:
+    """(params, tokens(B,1), cache, extras) -> (logits(B,1,V), cache)."""
+    shard = sh.make_shard_fn(mesh, sh.rules_for(mesh, seq_shard=seq_shard)) \
+        if mesh is not None else (lambda x, _: x)
+
+    def decode(params, tokens, cache, extras):
+        batch = {"tokens": tokens, **extras}
+        logits, cache, _ = model.apply(params, batch, cache=cache, shard=shard)
+        return logits, cache
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+def generate(model: Model, params, prompts: jnp.ndarray, *,
+             max_new_tokens: int = 32, max_seq: Optional[int] = None,
+             temperature: float = 0.0, key=None, mesh: Optional[Mesh] = None,
+             extras: Optional[Dict] = None,
+             eos_id: Optional[int] = None) -> jnp.ndarray:
+    """Batched generation. prompts: (B, S0) int32 -> (B, S0 + new)."""
+    B, S0 = prompts.shape
+    max_seq = max_seq or (S0 + max_new_tokens)
+    extras = extras or {}
+    dtype = jnp.dtype(model.cfg.dtype)
+    cache = model.init_cache(B, max_seq, dtype if dtype != jnp.int32 else jnp.float32)
+
+    prefill = make_prefill_step(model, mesh)
+    decode = make_decode_step(model, mesh)
+
+    logits, cache = prefill(params, {"tokens": prompts, **extras}, cache)
+    last = logits[:, -1]
+
+    decode_extras = {k: v for k, v in extras.items() if k != "frames"}
+
+    def sample(logits_1, k):
+        if temperature <= 0.0:
+            return jnp.argmax(logits_1, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits_1 / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.key(0)
+    out = [prompts]
+    tok = sample(last, key)[:, None]
+    done = jnp.zeros((B,), bool)
+    for i in range(max_new_tokens):
+        out.append(tok)
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+        if i == max_new_tokens - 1:
+            break
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, tok, cache, decode_extras)
+        tok = sample(logits[:, -1], sub)[:, None]
+        if eos_id is not None:
+            tok = jnp.where(done[:, None], eos_id, tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,68 @@
+"""Straggler detection — the multi-node analogue of the paper's
+"slowest execution time among all FPGAs is reported" barrier discipline.
+
+On a real pod every worker executes the same jitted step, so a straggler
+shows up as a slow *global* step (XLA collectives are barriers). The monitor
+tracks a running median of step wall-times and flags steps slower than
+``deadline_factor`` x median; the loop reacts per policy ('warn' — log and
+continue; 'checkpoint' — force an early checkpoint so a restart loses
+nothing; real deployments add 'evict' via the cluster scheduler).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class StragglerMonitor:
+    deadline_factor: float = 3.0
+    policy: str = "warn"  # 'warn' | 'checkpoint'
+    window: int = 128
+    _times: List[float] = field(default_factory=list)
+    flagged: List[int] = field(default_factory=list)
+
+    def record(self, step: int, duration: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self._times.append(duration)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        if len(self._times) < 8:  # need a baseline first
+            return False
+        med = self.median()
+        if duration > self.deadline_factor * med:
+            self.flagged.append(step)
+            return True
+        return False
+
+    def median(self) -> float:
+        s = sorted(self._times)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def deadline(self) -> Optional[float]:
+        if len(self._times) < 8:
+            return None
+        return self.deadline_factor * self.median()
+
+    def summary(self) -> dict:
+        if not self._times:
+            return {"steps": 0}
+        return {
+            "steps": len(self._times),
+            "median_s": self.median(),
+            "max_s": max(self._times),
+            "flagged": list(self.flagged),
+        }
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.duration = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,12 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — single-process tests see
+one CPU device (the dry-run sets its own 512-device flag in its own
+process; distributed tests run in a subprocess via tests/test_dist_wrapper)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

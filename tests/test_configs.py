@@ -1,0 +1,129 @@
+"""The assigned architecture table, verified literally (deliverable f)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import SHAPES, cell_is_applicable, get_config, list_archs
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+}
+
+MOE = {
+    "llama4-maverick-400b-a17b": (128, 1),
+    "qwen3-moe-235b-a22b": (128, 8),
+    "jamba-1.5-large-398b": (16, 2),
+}
+
+
+def test_all_archs_present():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    if arch in MOE:
+        e, k = MOE[arch]
+        assert cfg.num_experts == e
+        assert cfg.num_experts_per_tok == k
+
+
+def test_mamba_is_attention_free():
+    cfg = get_config("mamba2-130m")
+    assert cfg.is_attention_free
+    assert cfg.ssm_state == 128
+    assert all(k == "ssm" for k in cfg.layer_kinds())
+
+
+def test_jamba_interleave():
+    """Jamba: 1 attention layer per 8-block (1:7 mamba:attn interleave)."""
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = cfg.layer_kinds()
+    assert kinds.count("attn") == cfg.num_layers // 8
+    assert sum(cfg.moe_layer_mask()) == cfg.num_layers // 2
+
+
+def test_whisper_is_enc_dec():
+    cfg = get_config("whisper-base")
+    assert cfg.is_encoder_decoder
+    assert cfg.num_encoder_layers == 6
+    assert cfg.audio_ctx > 0
+
+
+def test_vision_cross_attn():
+    cfg = get_config("llama-3.2-vision-90b")
+    assert cfg.cross_attn_every > 0
+    assert cfg.vision_dim > 0 and cfg.num_patches > 0
+    assert sum(cfg.cross_attn_mask()) == cfg.num_layers // cfg.cross_attn_every
+
+
+# param counts vs public numbers (names encode the sizes)
+PARAM_BOUNDS = {
+    "deepseek-7b": (6e9, 8e9),
+    "llama3.2-3b": (3e9, 4.2e9),
+    "llama3-8b": (7e9, 9e9),
+    "qwen1.5-32b": (29e9, 36e9),
+    "mamba2-130m": (1.1e8, 1.6e8),
+    "llama4-maverick-400b-a17b": (3.4e11, 4.6e11),
+    "qwen3-moe-235b-a22b": (2.0e11, 2.7e11),
+    "jamba-1.5-large-398b": (3.3e11, 4.4e11),
+    "llama-3.2-vision-90b": (7.4e10, 1.0e11),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PARAM_BOUNDS))
+def test_param_count_in_band(arch):
+    lo, hi = PARAM_BOUNDS[arch]
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n:.3g} not in [{lo:.3g}, {hi:.3g}]"
+
+
+ACTIVE_BOUNDS = {
+    "llama4-maverick-400b-a17b": (1.2e10, 2.2e10),   # a17b
+    "qwen3-moe-235b-a22b": (1.7e10, 2.7e10),         # a22b
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE_BOUNDS))
+def test_active_param_count(arch):
+    lo, hi = ACTIVE_BOUNDS[arch]
+    n = get_config(arch).param_count(active_only=True)
+    assert lo <= n <= hi, f"{arch}: active {n:.3g} not in [{lo:.3g}, {hi:.3g}]"
+
+
+def test_long_context_applicability():
+    """long_500k runs only for SSM/hybrid (DESIGN.md §Arch-applicability)."""
+    long = SHAPES["long_500k"]
+    runnable = [a for a in list_archs()
+                if cell_is_applicable(get_config(a), long)[0]]
+    assert sorted(runnable) == ["jamba-1.5-large-398b", "mamba2-130m"]
+
+
+def test_total_cells():
+    """40 assigned cells: 32 runnable + 8 documented long_500k skips."""
+    total = runnable = 0
+    for a in list_archs():
+        for s in SHAPES.values():
+            total += 1
+            if cell_is_applicable(get_config(a), s)[0]:
+                runnable += 1
+    assert total == 40
+    assert runnable == 32

@@ -1,0 +1,177 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.comm import compression
+from repro.core import models
+from repro.core.ptrans import distribute_cyclic, undistribute_cyclic
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.kernels.gemm import fit_block
+from repro.models.model import next_token_loss
+from repro.roofline import _wire_factor, shape_bytes
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# --- PQ block-cyclic distribution is a bijection ---------------------------
+
+
+@SETTINGS
+@given(pg=st.sampled_from([1, 2, 4]),
+       lb=st.integers(1, 3),
+       b=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_distribute_undistribute_roundtrip(pg, lb, b, seed):
+    n = pg * lb * b
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, n)).astype(np.float32)
+    shards = distribute_cyclic(mat, pg, b)
+    assert shards.shape == (pg * pg, lb * b, lb * b)
+    back = undistribute_cyclic(shards, pg, b)
+    np.testing.assert_array_equal(back, mat)
+
+
+@SETTINGS
+@given(pg=st.sampled_from([2, 4]), b=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**31 - 1))
+def test_distribution_preserves_multiset(pg, b, seed):
+    n = pg * 2 * b
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((n, n)).astype(np.float32)
+    shards = distribute_cyclic(mat, pg, b)
+    np.testing.assert_allclose(np.sort(shards.ravel()), np.sort(mat.ravel()))
+
+
+# --- int8 error-feedback quantization ---------------------------------------
+
+
+@SETTINGS
+@given(size=st.integers(1, 2000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_bound(size, scale, seed):
+    """|x - deq(q(x))| <= max|block| / 127 / 2 per element (half-step)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(size).astype(np.float32) * scale)
+    q, s = compression.quantize(x)
+    back = compression.dequantize(q, s, x.shape, x.size)
+    blocks = np.asarray(jnp.pad(x, (0, (-x.size) % compression.BLOCK))
+                        ).reshape(-1, compression.BLOCK)
+    bound = np.abs(blocks).max(axis=1) / 127.0 * 0.5 + 1e-7
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(-1)
+    per_block_err = np.pad(err, (0, (-err.size) % compression.BLOCK)
+                           ).reshape(-1, compression.BLOCK)
+    assert (per_block_err.max(axis=1) <= bound + 1e-6).all()
+
+
+# --- fit_block always returns a divisor -------------------------------------
+
+
+@SETTINGS
+@given(size=st.integers(1, 4096), pref=st.integers(1, 512))
+def test_fit_block_divides(size, pref):
+    b = fit_block(size, pref)
+    assert 1 <= b <= max(pref, 1)
+    assert size % b == 0
+
+
+# --- loss properties ---------------------------------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_nonnegative_and_uniform_bound(seed):
+    """CE >= 0; for logits ~ 0 the loss is ~= log(V)."""
+    rng = np.random.default_rng(seed)
+    B, S, V = 2, 8, 64
+    tokens = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    zero_logits = jnp.zeros((B, S, V))
+    loss = float(next_token_loss(zero_logits, tokens, z_loss=0.0))
+    np.testing.assert_allclose(loss, np.log(V), rtol=1e-5)
+    logits = jnp.asarray(rng.standard_normal((B, S, V)), jnp.float32)
+    assert float(next_token_loss(logits, tokens, z_loss=0.0)) > 0
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_perfect_prediction_goes_small(seed):
+    rng = np.random.default_rng(seed)
+    B, S, V = 2, 8, 64
+    tokens = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    logits = 100.0 * jax.nn.one_hot(tokens[:, 1:], V)
+    logits = jnp.pad(logits, ((0, 0), (0, 1), (0, 0)))  # align: pos t -> t+1
+    logits = jnp.roll(logits, 1, axis=1) * 0 + jnp.concatenate(
+        [100.0 * jax.nn.one_hot(tokens[:, 1:], V),
+         jnp.zeros((B, 1, V))], axis=1)
+    assert float(next_token_loss(logits, tokens, z_loss=0.0)) < 1e-3
+
+
+# --- paper model functions ----------------------------------------------------
+
+
+@SETTINGS
+@given(bws=st.lists(st.floats(1e3, 1e12), min_size=1, max_size=21))
+def test_effective_bandwidth_is_mean(bws):
+    d = {2 ** i: bw for i, bw in enumerate(bws)}
+    assert models.effective_bandwidth(d) == sum(bws) / len(bws)
+    assert min(bws) - 1e-6 <= models.effective_bandwidth(d) <= max(bws) + 1e-6
+
+
+@SETTINGS
+@given(L=st.integers(1, 1 << 20))
+def test_beff_models_monotone_bounded(L):
+    """Bandwidth grows with message size and never exceeds the link peak."""
+    csn = models.beff_csn_model_520n(L)
+    assert csn <= 2 * 64 * 156.25e6 + 1e-6  # 2 channels x 32 B x f
+    ici = models.beff_ici_model(L)
+    assert ici <= 2 * 50e9
+    if L >= 2:
+        assert models.beff_ici_model(L) >= models.beff_ici_model(L // 2) - 1e-6
+
+
+def test_beff_csn_model_matches_paper_eq4():
+    """Paper Eq. 4 at L=64B: b = 2*64 / (6.4ns + 520ns)."""
+    got = models.beff_csn_model_520n(64)
+    want = 2 * 64 / (6.4e-9 + 520e-9)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_hpl_flops_rule():
+    assert models.hpl_flops(1000) == 2e9 / 3
+
+
+@SETTINGS
+@given(n=st.integers(2, 64))
+def test_wire_factor_bounds(n):
+    for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+        f = _wire_factor(op, n)
+        assert 0 < f < 2
+    assert _wire_factor("all-reduce", n) == 2 * (n - 1) / n
+
+
+# --- data pipeline: shard independence of worker count -----------------------
+
+
+@SETTINGS
+@given(step=st.integers(0, 1000), seed=st.integers(0, 100))
+def test_data_pure_function_of_step_shard(step, seed):
+    cfg = DataConfig(vocab_size=128, global_batch=4, seq_len=16, seed=seed)
+    a = SyntheticLMDataset(cfg).batch(step, 1, 2)["tokens"]
+    b = SyntheticLMDataset(cfg).batch(step, 1, 2)["tokens"]
+    np.testing.assert_array_equal(a, b)
+
+
+# --- HLO shape parser --------------------------------------------------------
+
+
+@SETTINGS
+@given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       dt=st.sampled_from(["f32", "bf16", "s8", "u32", "f64"]))
+def test_shape_bytes_product(dims, dt):
+    sizes = {"f32": 4, "bf16": 2, "s8": 1, "u32": 4, "f64": 8}
+    text = f"{dt}[{','.join(map(str, dims))}]"
+    want = sizes[dt] * int(np.prod(dims)) if dims else sizes[dt]
+    assert shape_bytes(text) == want

@@ -1,0 +1,146 @@
+"""Roofline HLO-parser unit tests against hand-written HLO snippets."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import roofline as rl
+
+
+def test_shape_bytes():
+    assert rl.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert rl.shape_bytes("bf16[10]") == 20
+    assert rl.shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert rl.shape_bytes("pred[]") == 1
+    assert rl.shape_bytes("token[]") == 0
+
+
+def test_shape_dims():
+    assert rl.shape_dims("f32[128,256]{1,0}") == [128, 256]
+    assert rl.shape_dims("bf16[]") == []
+
+
+SIMPLE = """
+HloModule test
+
+ENTRY %main (p0: f32[64,32], p1: f32[32,16]) -> f32[64,16] {
+  %p0 = f32[64,32]{1,0} parameter(0)
+  %p1 = f32[32,16]{1,0} parameter(1)
+  ROOT %dot.1 = f32[64,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_flops_simple():
+    stats = rl.analyze_hlo(SIMPLE)
+    assert stats.flops == 2 * 64 * 16 * 32
+    # traffic: result + both operands
+    assert stats.hbm_bytes == (64 * 16 + 64 * 32 + 32 * 16) * 4
+
+
+LOOPED = """
+HloModule test
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %ip = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %d)
+}
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%c0, %p)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_loop_multiplier():
+    stats = rl.analyze_hlo(LOOPED)
+    assert stats.flops == 10 * 2 * 8 * 8 * 8
+    assert stats.unresolved_loops == 0
+
+
+def test_while_loop_condition_fallback():
+    """Without backend_config the trip count comes from the cond constant."""
+    text = LOOPED.replace(', backend_config={"known_trip_count":{"n":"10"}}', "")
+    stats = rl.analyze_hlo(text)
+    assert stats.flops == 10 * 2 * 8 * 8 * 8
+
+
+COLLECTIVES = """
+HloModule test
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[4096]{0} collective-permute(%ag), source_target_pairs={{0,1},{1,2}}
+  ROOT %out = f32[1024]{0} slice(%cp), slice={[0:1024]}
+}
+"""
+
+
+def test_collective_bytes_and_wire_factors():
+    stats = rl.analyze_hlo(COLLECTIVES)
+    b = stats.operand_bytes
+    assert b["all-reduce"] == 1024 * 4
+    assert b["all-gather"] == 1024 * 4       # operand (shard) size
+    assert b["collective-permute"] == 4096 * 4
+    # wire: AR 2(n-1)/n, AG (n-1)/n with n=4; permute 1x
+    want = 1024 * 4 * 2 * 3 / 4 + 1024 * 4 * 3 / 4 + 4096 * 4
+    np.testing.assert_allclose(stats.wire_bytes, want)
+    assert stats.collective_count == 3
+
+
+DUS_FUSION = """
+HloModule test
+
+%fused_dus (a: f32[64,64], u: f32[1,64], i: s32[]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %u = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %z = s32[] constant(0)
+  ROOT %dus = f32[64,64]{1,0} dynamic-update-slice(%a, %u, %i, %z)
+}
+
+ENTRY %main (p: f32[64,64], u: f32[1,64], i: s32[]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %u = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[64,64]{1,0} fusion(%p, %u, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+def test_inplace_dus_fusion_counts_slice_only():
+    stats = rl.analyze_hlo(DUS_FUSION)
+    assert stats.hbm_bytes == 2 * 1 * 64 * 4  # read+write the slice, not 16KiB
+
+
+def test_wire_factor_values():
+    assert rl._wire_factor("all-reduce", 4) == pytest.approx(1.5)
+    assert rl._wire_factor("all-gather", 8) == pytest.approx(7 / 8)
+    assert rl._wire_factor("reduce-scatter", 2) == pytest.approx(0.5)
+    assert rl._wire_factor("collective-permute", 2) == 1.0
+
+
+def test_model_flops_for():
+    from repro.configs import get_config
+    cfg = get_config("llama3-8b")
+    n = cfg.param_count(active_only=True)
+    assert rl.model_flops_for(cfg, "train", 256, 4096) == 6.0 * n * 256 * 4096
+    assert rl.model_flops_for(cfg, "decode", 128, 32768) == 2.0 * n * 128

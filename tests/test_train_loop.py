@@ -1,0 +1,51 @@
+"""Fault tolerance: loss decreases, crash injection + auto-resume is
+bit-exact with the uninterrupted run, straggler monitor flags outliers."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config, reduced
+from repro.data import DataConfig
+from repro.train.loop import InjectedFailure, TrainLoopConfig, train_loop
+from repro.train.straggler import StragglerMonitor
+
+
+def _cfgs(tmp_path, steps=14, every=5):
+    cfg = reduced(get_config("llama3.2-3b"), layers=2, d_model=32)
+    run = RunConfig(checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=every,
+                    learning_rate=1e-2, warmup_steps=2)
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=4, seq_len=32)
+    return cfg, run, data
+
+
+def test_loss_decreases(tmp_path):
+    cfg, run, data = _cfgs(tmp_path)
+    hist = train_loop(cfg, run, data, TrainLoopConfig(steps=14))
+    assert hist["loss"][-1] < hist["loss"][0]
+    assert hist["step"] == list(range(14))
+
+
+def test_crash_resume_bit_exact(tmp_path):
+    cfg, run, data = _cfgs(tmp_path)
+    with pytest.raises(InjectedFailure):
+        train_loop(cfg, run, data, TrainLoopConfig(steps=14, fail_at_step=12))
+    resumed = train_loop(cfg, run, data, TrainLoopConfig(steps=14))
+    assert resumed["step"][0] == 10  # restarted from the step-10 checkpoint
+
+    cfg2, run2, data2 = _cfgs(tmp_path / "fresh")
+    clean = train_loop(cfg2, run2, data2, TrainLoopConfig(steps=14))
+    np.testing.assert_allclose(resumed["loss"][-1], clean["loss"][-1],
+                               rtol=1e-6)
+
+
+def test_straggler_monitor_flags():
+    mon = StragglerMonitor(deadline_factor=2.0)
+    for i in range(10):
+        assert not mon.record(i, 0.1)
+    assert mon.record(10, 0.5)           # 5x median -> flagged
+    assert not mon.record(11, 0.15)
+    assert mon.flagged == [10]
+    s = mon.summary()
+    assert s["median_s"] == pytest.approx(0.1, rel=0.2)
+    assert mon.deadline() == pytest.approx(0.2, rel=0.2)
