@@ -16,7 +16,7 @@ from repro.core.beff import run_beff  # noqa: E402
 from repro.launch.mesh import make_ring_mesh  # noqa: E402
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
     mesh = make_ring_mesh()
     n = mesh.devices.size
     max_log = 12 if quick else 16
@@ -25,7 +25,8 @@ def main(quick: bool = False):
     print(f"== b_eff (paper Fig. 10/11) over {n} devices ==")
     results = {}
     for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
-        res = run_beff(mesh, ct, max_log=max_log, reps=reps, rounds=2)
+        res = run_beff(mesh, ct, max_log=max_log, reps=reps, rounds=2,
+                       schedule=schedule or "auto")
         results[ct.value] = res
         rows = []
         for L, bw in sorted(res.details["bandwidth_by_size"].items()):
@@ -43,7 +44,7 @@ def main(quick: bool = False):
           "(paper: direct CSN wins, Fig. 10)")
     save_result("beff_bandwidth", {
         k: {"b_eff": v.metric, "bandwidth_by_size": v.details["bandwidth_by_size"],
-            "error": v.error}
+            "error": v.error, "schedule": v.details["schedule"]}
         for k, v in results.items()})
     return results
 

@@ -15,7 +15,7 @@ from repro.core.hpl_blocked import run_hpl_single  # noqa: E402
 from repro.launch.mesh import make_torus_mesh  # noqa: E402
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
     sizes = [128, 256, 384] if quick else [128, 256, 384, 512, 768]
     blocks = [32, 64]
 
@@ -42,13 +42,19 @@ def main(quick: bool = False):
         mesh = make_torus_mesh(2)
         n = 256 if quick else 512
         rows = []
-        for ct, sched in ((CT.ICI_DIRECT, "chain"), (CT.ICI_DIRECT, "native"),
-                          (CT.HOST_STAGED, "staged")):
+        if schedule:  # one engine schedule suite-wide (--schedule NAME)
+            cells = [(CT.ICI_DIRECT, schedule), (CT.HOST_STAGED, schedule)]
+        else:
+            cells = [(CT.ICI_DIRECT, "chain"), (CT.ICI_DIRECT, "native"),
+                     (CT.ICI_DIRECT, "ring2d"), (CT.HOST_STAGED, "staged")]
+        for ct, sched in cells:
             res = run_hpl(mesh, ct, n=n, b=64, schedule=sched, reps=1)
-            rows.append([ct.value, sched, n, f"{res.metric:.3f}",
+            used = res.details["schedule"]
+            rows.append([ct.value, used, n, f"{res.metric:.3f}",
                          f"{res.error:.2e}"])
-            record[f"dist/{ct.value}/{sched}"] = {"gflops": res.metric,
-                                                  "err": res.error}
+            record[f"dist/{ct.value}/{used}"] = {"gflops": res.metric,
+                                                 "err": res.error,
+                                                 "schedule": used}
         print(table(rows, ["backend", "schedule", "n", "GFLOP/s", "resid"]))
 
     record["single_curve_b64"] = curve

@@ -15,7 +15,7 @@ from repro.core.models import hpl_strong_scaling_model  # noqa: E402
 from repro.launch.mesh import make_torus_mesh  # noqa: E402
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
     n_dev = len(jax.devices())
     grids = [g for g in (1, 2) if g * g <= n_dev]
     n_base = 256 if quick else 512
@@ -35,7 +35,7 @@ def main(quick: bool = False):
                     res = run_hpl_single(n=n, b=b, reps=1)
                 else:
                     res = run_hpl(make_torus_mesh(g), ct, n=n, b=b,
-                                  schedule="native", reps=1)
+                                  schedule=schedule or "native", reps=1)
                 key = (label, ct.value)
                 if key not in base:
                     base[key] = res.metric
@@ -44,7 +44,8 @@ def main(quick: bool = False):
                              f"{res.metric / base[key]:.2f}x",
                              f"{res.error:.2e}"])
                 record[f"{label}/{ct.value}/g{g}"] = {
-                    "n": n, "gflops": res.metric, "err": res.error}
+                    "n": n, "gflops": res.metric, "err": res.error,
+                    "schedule": res.details.get("schedule", "local")}
     print(table(rows, ["scaling", "backend", "grid", "n", "GFLOP/s",
                        "speedup", "resid"]))
 

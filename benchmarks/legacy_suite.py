@@ -16,12 +16,14 @@ from repro.core.stream import run_stream  # noqa: E402
 from repro.launch.mesh import make_ring_mesh  # noqa: E402
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
+    # the legacy kernels are embarrassingly parallel (no inter-device
+    # schedule to select); ``schedule`` is accepted for driver uniformity
     mesh = make_ring_mesh()
     n = mesh.devices.size
 
     print(f"== legacy suite (paper Fig. 16) over {n} devices ==")
-    record = {}
+    record = {"schedule": schedule or "n/a"}
     rows = []
 
     res = run_stream(mesh, elems_per_device=(1 << 18) if quick else (1 << 20))

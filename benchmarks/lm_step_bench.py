@@ -23,7 +23,9 @@ from repro.train.step import init_train_state, make_train_step  # noqa: E402
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
+    # GSPMD-scheduled steps (XLA picks the collectives); ``schedule``
+    # accepted for driver uniformity
     archs = (["llama3-8b", "mamba2-130m", "qwen3-moe-235b-a22b"]
              if quick else list_archs())
     B, S = 4, 64

@@ -14,7 +14,7 @@ from repro.core.ptrans import run_ptrans  # noqa: E402
 from repro.launch.mesh import make_torus_mesh  # noqa: E402
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, schedule=None):
     n_dev = len(jax.devices())
     grids = [g for g in (1, 2, 3) if g * g <= n_dev]
     n_base = 256 if quick else 512
@@ -32,11 +32,12 @@ def main(quick: bool = False):
                 if n % (g * b):
                     continue
                 mesh = make_torus_mesh(g)
-                res = run_ptrans(mesh, ct, n=n, b=b, reps=reps)
-                key = (ct.value, g)
+                res = run_ptrans(mesh, ct, n=n, b=b, reps=reps,
+                                 schedule=schedule or "auto")
                 record[f"{label}/{ct.value}/g{g}"] = {
                     "n": n, "gflops": res.metric, "err": res.error,
-                    "time": res.times["best"]}
+                    "time": res.times["best"],
+                    "schedule": res.details["schedule"]}
                 if g == grids[0]:
                     base_perf[ct.value] = res.metric
                 speedup = res.metric / base_perf[ct.value]

@@ -1,4 +1,10 @@
-"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+"""Benchmark driver:
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--schedule NAME]``.
+
+``--schedule`` selects a registered collective-engine schedule (``chain``,
+``native``, ``staged``, ``ring2d``, ``rs_ag``; see repro.comm.engine) for
+every benchmark that communicates; the engine's resolved schedule name is
+recorded in each result file.
 
 One module per paper table/figure (DESIGN.md §6):
   beff_bandwidth   Fig. 10/11 + Eqs. 1/2/4
@@ -30,18 +36,42 @@ MODULES = [
 ]
 
 
+def _parse_schedule(argv):
+    """--schedule NAME or --schedule=NAME; validated against the registry."""
+    schedule = None
+    rest = []
+    it = iter(argv)
+    for a in it:
+        if a == "--schedule":
+            schedule = next(it, None)
+            if schedule is None or schedule.startswith("-"):
+                raise SystemExit("--schedule requires a value, e.g. "
+                                 "--schedule ring2d")
+        elif a.startswith("--schedule="):
+            schedule = a.split("=", 1)[1]
+        else:
+            rest.append(a)
+    if schedule is not None:
+        # engine construction is the single source of schedule validation
+        from repro.comm.engine import CollectiveEngine
+        CollectiveEngine(schedule=schedule)
+    return schedule, rest
+
+
 def main():
-    quick = "--quick" in sys.argv
-    only = [a for a in sys.argv[1:] if not a.startswith("-")]
+    schedule, argv = _parse_schedule(sys.argv[1:])
+    quick = "--quick" in argv
+    only = [a for a in argv if not a.startswith("-")]
     failures = []
     for name in (only or MODULES):
         print("\n" + "=" * 78)
-        print(f"### benchmarks.{name}")
+        print(f"### benchmarks.{name}"
+              + (f" (schedule={schedule})" if schedule else ""))
         print("=" * 78)
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=quick)
+            mod.main(quick=quick, schedule=schedule)
             print(f"[{name} done in {time.time() - t0:.1f}s]")
         except Exception:  # noqa: BLE001
             failures.append(name)

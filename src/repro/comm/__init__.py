@@ -5,6 +5,14 @@ from repro.comm.types import (  # noqa: F401
     TPU_V5E,
     comm_type,
 )
+from repro.comm.topology import AxisTopology, MeshTopology  # noqa: F401
+from repro.comm.engine import (  # noqa: F401
+    CollectiveEngine,
+    UnknownScheduleError,
+    known_schedules,
+    register_schedule,
+    schedules_for,
+)
 from repro.comm.collectives import (  # noqa: F401
     all_to_all_tiles,
     psum_schedule,

@@ -1,35 +1,30 @@
-"""Distributed primitives with one implementation per CommunicationType.
+"""Distributed primitives — thin compatibility layer over the engine.
 
-All functions are designed to run inside a ``shard_map`` body. Three
-schedules exist where relevant:
+The schedule implementations now live in :mod:`repro.comm.engine`, registered
+by name (``chain`` / ``native`` / ``staged`` / ``ring2d`` / ``rs_ag``) and
+selected through :class:`repro.comm.engine.CollectiveEngine`. The keyword
+functions here preserve the original ad-hoc ``(comm, schedule)`` signatures
+for external callers; in-repo code routes through an engine instance.
 
-* ``chain``  — paper-faithful circuit-switched store-and-forward: data moves
-  hop-by-hop via ``ppermute`` along the ring/torus, exactly like the paper's
-  network kernels forwarding blocks through the CSN (Figs. 2, 6, 8).
-* ``native`` — beyond-paper: XLA's native collective (all_gather/psum/
-  all_to_all), which uses all torus links in both directions.
-* ``staged`` — the PCIe+MPI analogue: every byte is routed through a shared
-  staging domain (emulated intra-pod as gather+select; across the ``pod``
-  mesh axis XLA itself must stage over DCN, which is the real host network).
+All functions run inside a ``shard_map`` body.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
-
-import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.comm.engine import CollectiveEngine
 from repro.comm.topology import ring_perm
 from repro.comm.types import CommunicationType, comm_type
-
-
-def axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+from repro.compat import axis_size
 
 
 def axis_index(axis: str):
     return lax.axis_index(axis)
+
+
+def _engine(comm, schedule: str) -> CollectiveEngine:
+    return CollectiveEngine(comm=comm_type(comm), schedule=schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -46,22 +41,9 @@ def ring_shift(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
 
 def ring_exchange_bidir(x_fwd: jnp.ndarray, x_bwd: jnp.ndarray, axis: str,
                         comm=CommunicationType.ICI_DIRECT):
-    """Bidirectional neighbor exchange (the b_eff message pattern: each rank
-    sends simultaneously to both ring neighbors). Returns (recv_from_left,
-    recv_from_right)."""
-    ct = comm_type(comm)
-    if ct is CommunicationType.ICI_DIRECT:
-        recv_l = ring_shift(x_fwd, axis, +1)   # left neighbor's fwd buffer
-        recv_r = ring_shift(x_bwd, axis, -1)   # right neighbor's bwd buffer
-        return recv_l, recv_r
-    # staged: both buffers transit the staging domain (gather + select)
-    n = axis_size(axis)
-    idx = axis_index(axis)
-    all_f = lax.all_gather(x_fwd, axis)  # (n, ...)
-    all_b = lax.all_gather(x_bwd, axis)
-    recv_l = jnp.take(all_f, (idx - 1) % n, axis=0)
-    recv_r = jnp.take(all_b, (idx + 1) % n, axis=0)
-    return recv_l, recv_r
+    """Bidirectional neighbor exchange (the b_eff message pattern). Returns
+    (recv_from_left, recv_from_right)."""
+    return _engine(comm, "auto").ring_exchange(x_fwd, x_bwd, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -71,32 +53,9 @@ def ring_exchange_bidir(x_fwd: jnp.ndarray, x_bwd: jnp.ndarray, axis: str,
 
 def ring_bcast(val: jnp.ndarray, axis: str, src, comm=CommunicationType.ICI_DIRECT,
                schedule: str = "chain") -> jnp.ndarray:
-    """Broadcast ``val`` from rank ``src`` (traced scalar ok) to all ranks
-    along ``axis``.
-
-    chain   : (n-1)-hop store-and-forward pipeline (paper network kernels).
-    native  : one-hot mask + psum (single XLA all-reduce on the axis).
-    staged  : all_gather + select.
-    """
-    ct = comm_type(comm)
-    n = axis_size(axis)
-    idx = axis_index(axis)
-    if ct is CommunicationType.HOST_STAGED or schedule == "staged":
-        allv = lax.all_gather(val, axis)
-        return jnp.take(allv, src, axis=0)
-    if schedule == "native":
-        # all-gather + select: (n-1)/n wire vs the masked-psum broadcast's
-        # 2(n-1)/n — measured 2x on the production HPL torus (§Perf C4).
-        # (psum would also need a zero-mask: non-source ranks hold inf/nan
-        # garbage from speculative local factorizations.)
-        allv = lax.all_gather(val, axis)
-        return jnp.take(allv, src, axis=0)
-    # chain: after k hops, ranks src..src+k (mod n) hold the value
-    out = val
-    for _ in range(n - 1):
-        nxt = ring_shift(out, axis, +1)
-        out = jnp.where(idx == src, out, nxt)
-    return out
+    """Broadcast ``val`` from rank ``src`` (traced scalar ok) along ``axis``
+    with the named schedule (see :mod:`repro.comm.engine`)."""
+    return _engine(comm, schedule).bcast(val, axis, src)
 
 
 # ---------------------------------------------------------------------------
@@ -108,46 +67,9 @@ def all_to_all_tiles(x: jnp.ndarray, axis: str, *, split_axis: int,
                      concat_axis: int, comm=CommunicationType.ICI_DIRECT,
                      schedule: str = "native") -> jnp.ndarray:
     """Exchange tiles so rank i's j-th split lands on rank j; rank j
-    concatenates received tiles ordered by source rank on ``concat_axis``.
-
-    native : lax.all_to_all (XLA uses all links).
-    chain  : n-1 ppermute rounds, one ring distance per round (paper CSN
-             schedule: every tile travels hop-by-hop through the ring).
-    staged : all_gather + local slice (every byte transits the staging domain).
-    """
-    ct = comm_type(comm)
-    n = axis_size(axis)
-    idx = axis_index(axis)
-    chunk = x.shape[split_axis] // n
-
-    if ct is CommunicationType.HOST_STAGED or schedule == "staged":
-        gathered = lax.all_gather(x, axis)  # (n, ...): every rank's buffer
-        outs = []
-        for s in range(n):  # tile ``idx`` from each source rank s, in order
-            row = jnp.squeeze(lax.dynamic_slice_in_dim(gathered, s, 1, 0), 0)
-            outs.append(lax.dynamic_slice_in_dim(row, idx * chunk, chunk, split_axis))
-        return jnp.concatenate(outs, axis=concat_axis)
-
-    if schedule == "chain":
-        received = []
-        for dist in range(n):
-            # the tile this rank owes the rank ``dist`` hops to its right is
-            # split index (idx + dist) mod n; forward it ``dist`` hops.
-            send = lax.dynamic_slice_in_dim(
-                x, ((idx + dist) % n) * chunk, chunk, split_axis)
-            recv = send
-            for _ in range(dist):
-                recv = ring_shift(recv, axis, +1)
-            received.append(recv)  # tile from source rank (idx - dist) mod n
-        stacked = jnp.stack(received, axis=0)  # indexed by dist
-        # output position s holds the tile from source s = (idx - dist) mod n,
-        # i.e. dist = (idx - s) mod n
-        perm = (idx - jnp.arange(n)) % n
-        by_src = jnp.take(stacked, perm, axis=0)
-        return jnp.concatenate([by_src[s] for s in range(n)], axis=concat_axis)
-
-    return lax.all_to_all(x, axis, split_axis=split_axis,
-                          concat_axis=concat_axis, tiled=True)
+    concatenates received tiles ordered by source rank on ``concat_axis``."""
+    return _engine(comm, schedule).all_to_all_tiles(
+        x, axis, split_axis=split_axis, concat_axis=concat_axis)
 
 
 def roll_with_axis(x: jnp.ndarray, shift, axis: int) -> jnp.ndarray:
@@ -164,17 +86,5 @@ def roll_with_axis(x: jnp.ndarray, shift, axis: int) -> jnp.ndarray:
 
 def psum_schedule(x: jnp.ndarray, axis: str, comm=CommunicationType.ICI_DIRECT,
                   schedule: str = "native") -> jnp.ndarray:
-    """All-reduce.  chain = ring reduce (n-1 hops, paper-style); native =
-    lax.psum; staged = all_gather + local sum."""
-    ct = comm_type(comm)
-    n = axis_size(axis)
-    if ct is CommunicationType.HOST_STAGED or schedule == "staged":
-        return jnp.sum(lax.all_gather(x, axis), axis=0)
-    if schedule == "chain":
-        acc = x
-        buf = x
-        for _ in range(n - 1):
-            buf = ring_shift(buf, axis, +1)
-            acc = acc + buf
-        return acc
-    return lax.psum(x, axis)
+    """All-reduce over ``axis`` with the named schedule."""
+    return _engine(comm, schedule).allreduce(x, axis)

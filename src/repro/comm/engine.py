@@ -1,0 +1,500 @@
+"""Collective engine: named communication schedules behind one API.
+
+The paper's core architecture is one set of benchmark kernels running over
+interchangeable communication paths (circuit-switched inter-FPGA links vs
+host-staged PCIe+MPI). ACCL-style engines show the productive way to express
+that: a *schedule registry* — every collective op has named implementations
+("schedules") registered against it, and a :class:`CollectiveEngine` selects
+one per op from ``(CommunicationType, schedule name)`` plus per-axis topology
+metadata (:class:`repro.comm.topology.MeshTopology`). Callers hold an engine
+and never branch on comm/schedule themselves.
+
+Ops
+---
+``bcast(val, axis, src)``                     one-to-all along a ring/torus dim
+``all_to_all_tiles(x, axis, split/concat)``   PTRANS / MoE dispatch exchange
+``allreduce(x, axis)``                        gradient / scalar reduction
+``ring_exchange(fwd, bwd, axis)``             b_eff bidirectional neighbor swap
+``grid_transpose(x, axes, pg)``               PTRANS partner exchange on a torus
+
+Schedules
+---------
+``chain``   paper-faithful store-and-forward: hop-by-hop ``ppermute`` rounds
+            (the CSN network kernels of Figs. 2/6/8).
+``native``  XLA's native collective — all torus links, both directions.
+``staged``  host-staged analogue: every byte transits the staging domain
+            (all_gather + local select). Forced whenever the engine's comm
+            type is ``HOST_STAGED``.
+``ring2d``  torus-aware two-phase ring schedules: bcast = scatter +
+            ring all-gather (2(n-1)/n wire vs chain's (n-1)); allreduce =
+            per-torus-dimension ring reduce-scatter/all-gather, applied
+            row-then-column for tuple axes.
+``rs_ag``   bandwidth-optimal ring reduce-scatter + all-gather allreduce;
+            the per-hop accumulate is the Pallas-fused step in
+            :mod:`repro.kernels.ring`.
+``direct``  point-to-point ``ppermute`` (ring_exchange / grid_transpose).
+
+Registering a new schedule::
+
+    from repro.comm.engine import register_schedule
+
+    @register_schedule("allreduce", "mytree")
+    def _allreduce_mytree(engine, x, axis):
+        ...  # runs inside shard_map; use lax/ppermute freely
+        return reduced
+
+    CollectiveEngine(schedule="mytree").allreduce(x, "x")
+
+All schedule bodies run inside ``shard_map``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.topology import MeshTopology, ring_perm, transpose_perm
+from repro.comm.types import CommunicationType, comm_type
+from repro.compat import axis_size
+
+OPS: Tuple[str, ...] = ("bcast", "all_to_all_tiles", "allreduce",
+                        "ring_exchange", "grid_transpose")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {op: {} for op in OPS}
+
+# schedule used per op when the engine is constructed with schedule="auto"
+_AUTO = {
+    "bcast": "chain",
+    "all_to_all_tiles": "native",
+    "allreduce": "native",
+    "ring_exchange": "direct",
+    "grid_transpose": "direct",
+}
+
+
+class UnknownScheduleError(ValueError):
+    """Raised for a schedule name no op has registered."""
+
+
+def register_schedule(op: str, name: str):
+    """Decorator: register ``fn(engine, *args, **kw)`` as schedule ``name``
+    for collective ``op``."""
+    if op not in OPS:
+        raise ValueError(f"unknown collective op {op!r}; ops are {OPS}")
+
+    def deco(fn):
+        _REGISTRY[op][name] = fn
+        return fn
+    return deco
+
+
+def schedules_for(op: str) -> Tuple[str, ...]:
+    """Registered schedule names for ``op``, sorted."""
+    return tuple(sorted(_REGISTRY[op]))
+
+
+def known_schedules() -> Tuple[str, ...]:
+    names = {"auto"}
+    for op in OPS:
+        names.update(_REGISTRY[op])
+    return tuple(sorted(names))
+
+
+# ---------------------------------------------------------------------------
+# shared ring helpers (shard_map-body level)
+# ---------------------------------------------------------------------------
+
+
+def _ring_shift(x, axis, shift=1):
+    n = axis_size(axis)
+    return lax.ppermute(x, axis, ring_perm(n, shift))
+
+
+def _pack_chunks(x, n):
+    """Flatten + zero-pad ``x`` into an (n, L) chunk stack."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(n, -1)
+
+
+def _chunk(stack, k):
+    """Chunk ``k`` (traced ok) of an (n, L) stack."""
+    return jnp.squeeze(lax.dynamic_slice_in_dim(stack, k, 1, 0), 0)
+
+
+def _set_chunk(stack, k, val):
+    return lax.dynamic_update_slice(stack, val[None], (k, 0))
+
+
+def _fused_add(engine, acc, recv):
+    if jnp.issubdtype(acc.dtype, jnp.floating):
+        import jax
+
+        from repro.kernels.ring import fused_chunk_add
+        interp = engine.interpret
+        if interp is None:  # auto: compile on TPU, interpret elsewhere
+            interp = jax.default_backend() != "tpu"
+        return fused_chunk_add(acc, recv, interpret=interp)
+    return acc + recv
+
+
+# ---------------------------------------------------------------------------
+# bcast schedules
+# ---------------------------------------------------------------------------
+
+
+@register_schedule("bcast", "chain")
+def _bcast_chain(engine, val, axis, src):
+    # (n-1)-hop store-and-forward pipeline: after k hops ranks src..src+k
+    # hold the value (the paper's network-kernel forwarding).
+    n = axis_size(axis)
+    idx = lax.axis_index(axis)
+    out = val
+    for _ in range(n - 1):
+        nxt = _ring_shift(out, axis, +1)
+        out = jnp.where(idx == src, out, nxt)
+    return out
+
+
+@register_schedule("bcast", "native")
+@register_schedule("bcast", "staged")
+def _bcast_gather(engine, val, axis, src):
+    # all_gather + select: (n-1)/n wire vs the masked-psum broadcast's
+    # 2(n-1)/n; non-source ranks may hold inf/nan garbage (speculative local
+    # factorizations), so a psum would need a zero-mask anyway. Under
+    # HOST_STAGED this is also the staging-domain route: every byte transits
+    # the gather.
+    allv = lax.all_gather(val, axis)
+    return jnp.take(allv, src, axis=0)
+
+
+@register_schedule("bcast", "ring2d")
+def _bcast_ring2d(engine, val, axis, src):
+    # torus-aware two-phase ring bcast (scatter + ring all-gather): the
+    # value is split into n chunks; the scatter pipeline injects chunk d at
+    # step n-1-d so every chunk reaches its owner by step n-2, then a ring
+    # all-gather circulates the owned chunks. Wire: 2(n-1)/n of the payload
+    # per link vs chain's (n-1) — each of HPL's row/column broadcasts uses
+    # only its own torus dimension, so both dimensions stream concurrently.
+    n = axis_size(axis)
+    if n == 1:
+        return val
+    idx = lax.axis_index(axis)
+    chunks = _pack_chunks(val, n)
+    L = chunks.shape[1]
+    dist = (idx - src) % n
+
+    # phase 1 — scatter: src injects chunks n-1, n-2, ..., 0; everyone else
+    # forwards. After step s, the rank at distance d carries the chunk src
+    # injected at step s-(d-1); at the final step that is chunk d.
+    carry = _chunk(chunks, (n - 1) % n)
+    for s in range(n - 1):
+        recv = _ring_shift(carry, axis, +1)
+        inject = _chunk(chunks, (n - 2 - s) % n)
+        carry = jnp.where(idx == src, inject, recv)
+    own = jnp.where(dist == 0, _chunk(chunks, 0), carry)
+
+    # phase 2 — ring all-gather of the owned chunks
+    out = jnp.zeros((n, L), val.dtype)
+    out = _set_chunk(out, dist, own)
+    cur = own
+    for s in range(n - 1):
+        cur = _ring_shift(cur, axis, +1)
+        out = _set_chunk(out, (dist - 1 - s) % n, cur)
+    return out.reshape(-1)[: val.size].reshape(val.shape)
+
+
+# ---------------------------------------------------------------------------
+# all_to_all_tiles schedules
+# ---------------------------------------------------------------------------
+
+
+@register_schedule("all_to_all_tiles", "native")
+def _a2a_native(engine, x, axis, *, split_axis, concat_axis):
+    return lax.all_to_all(x, axis, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=True)
+
+
+@register_schedule("all_to_all_tiles", "chain")
+def _a2a_chain(engine, x, axis, *, split_axis, concat_axis):
+    # n-1 ppermute rounds, one ring distance per round (paper CSN schedule:
+    # every tile travels hop-by-hop through the ring).
+    n = axis_size(axis)
+    idx = lax.axis_index(axis)
+    chunk = x.shape[split_axis] // n
+    received = []
+    for dist in range(n):
+        # the tile this rank owes the rank ``dist`` hops to its right is
+        # split index (idx + dist) mod n; forward it ``dist`` hops.
+        send = lax.dynamic_slice_in_dim(
+            x, ((idx + dist) % n) * chunk, chunk, split_axis)
+        recv = send
+        for _ in range(dist):
+            recv = _ring_shift(recv, axis, +1)
+        received.append(recv)  # tile from source rank (idx - dist) mod n
+    stacked = jnp.stack(received, axis=0)  # indexed by dist
+    # output position s holds the tile from source s = (idx - dist) mod n,
+    # i.e. dist = (idx - s) mod n
+    perm = (idx - jnp.arange(n)) % n
+    by_src = jnp.take(stacked, perm, axis=0)
+    return jnp.concatenate([by_src[s] for s in range(n)], axis=concat_axis)
+
+
+@register_schedule("all_to_all_tiles", "staged")
+def _a2a_staged(engine, x, axis, *, split_axis, concat_axis):
+    # every byte transits the staging domain (gather + local slice)
+    n = axis_size(axis)
+    idx = lax.axis_index(axis)
+    chunk = x.shape[split_axis] // n
+    gathered = lax.all_gather(x, axis)  # (n, ...): every rank's buffer
+    outs = []
+    for s in range(n):  # tile ``idx`` from each source rank s, in order
+        row = jnp.squeeze(lax.dynamic_slice_in_dim(gathered, s, 1, 0), 0)
+        outs.append(lax.dynamic_slice_in_dim(row, idx * chunk, chunk,
+                                             split_axis))
+    return jnp.concatenate(outs, axis=concat_axis)
+
+
+# ---------------------------------------------------------------------------
+# allreduce schedules
+# ---------------------------------------------------------------------------
+
+
+@register_schedule("allreduce", "native")
+def _allreduce_native(engine, x, axis):
+    return lax.psum(x, axis)
+
+
+@register_schedule("allreduce", "chain")
+def _allreduce_chain(engine, x, axis):
+    # ring reduce: n-1 full-payload hops, paper-style store-and-forward
+    n = axis_size(axis)
+    acc = x
+    buf = x
+    for _ in range(n - 1):
+        buf = _ring_shift(buf, axis, +1)
+        acc = acc + buf
+    return acc
+
+
+@register_schedule("allreduce", "staged")
+def _allreduce_staged(engine, x, axis):
+    return jnp.sum(lax.all_gather(x, axis), axis=0)
+
+
+@register_schedule("allreduce", "rs_ag")
+def _allreduce_rs_ag(engine, x, axis):
+    # bandwidth-optimal ring allreduce: reduce-scatter then all-gather,
+    # 2(n-1)/n of the payload per link. The per-hop accumulate is the
+    # Pallas-fused step (repro.kernels.ring) — receive buffer and local
+    # chunk stream through VMEM once.
+    if isinstance(axis, (tuple, list)):
+        # torus: one ring pass per dimension (row-then-column)
+        for ax in axis:
+            x = _allreduce_rs_ag(engine, x, ax)
+        return x
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    stack = _pack_chunks(x, n)
+
+    # reduce-scatter: step s sends chunk (idx-s) right, accumulates the
+    # incoming chunk (idx-1-s). After n-1 steps rank i owns chunk (i+1)%n.
+    for s in range(n - 1):
+        send = _chunk(stack, (idx - s) % n)
+        recv = _ring_shift(send, axis, +1)
+        local = _chunk(stack, (idx - 1 - s) % n)
+        stack = _set_chunk(stack, (idx - 1 - s) % n,
+                           _fused_add(engine, local, recv))
+
+    # all-gather: circulate the owned chunk around the ring
+    cur = _chunk(stack, (idx + 1) % n)
+    for s in range(n - 1):
+        cur = _ring_shift(cur, axis, +1)
+        stack = _set_chunk(stack, (idx - s) % n, cur)
+    return stack.reshape(-1)[: x.size].reshape(x.shape)
+
+
+@register_schedule("allreduce", "ring2d")
+def _allreduce_ring2d(engine, x, axis):
+    # torus-aware row/column schedule: a ring reduce-scatter/all-gather per
+    # torus dimension. For a single axis this is exactly rs_ag.
+    return _allreduce_rs_ag(engine, x, axis)
+
+
+# ---------------------------------------------------------------------------
+# ring_exchange schedules
+# ---------------------------------------------------------------------------
+
+
+@register_schedule("ring_exchange", "direct")
+@register_schedule("ring_exchange", "chain")
+def _exchange_direct(engine, x_fwd, x_bwd, axis):
+    # one circuit-switched hop in each direction (b_eff message pattern)
+    recv_l = _ring_shift(x_fwd, axis, +1)  # left neighbor's fwd buffer
+    recv_r = _ring_shift(x_bwd, axis, -1)  # right neighbor's bwd buffer
+    return recv_l, recv_r
+
+
+@register_schedule("ring_exchange", "staged")
+def _exchange_staged(engine, x_fwd, x_bwd, axis):
+    # both buffers transit the staging domain (gather + select)
+    n = axis_size(axis)
+    idx = lax.axis_index(axis)
+    all_f = lax.all_gather(x_fwd, axis)  # (n, ...)
+    all_b = lax.all_gather(x_bwd, axis)
+    recv_l = jnp.take(all_f, (idx - 1) % n, axis=0)
+    recv_r = jnp.take(all_b, (idx + 1) % n, axis=0)
+    return recv_l, recv_r
+
+
+# ---------------------------------------------------------------------------
+# grid_transpose schedules (PTRANS partner exchange)
+# ---------------------------------------------------------------------------
+
+
+@register_schedule("grid_transpose", "direct")
+@register_schedule("grid_transpose", "chain")
+def _transpose_direct(engine, x, axes, pg):
+    # pure point-to-point circuit-switched exchange with the grid-transpose
+    # partner (paper §2.2.2)
+    return lax.ppermute(x, axes, transpose_perm(pg))
+
+
+@register_schedule("grid_transpose", "staged")
+def _transpose_staged(engine, x, axes, pg):
+    # all_gather over the full grid + local selection: every block transits
+    # the staging domain (paper §2.2.1 via PCIe+MPI)
+    row_ax, col_ax = axes
+    g = lax.all_gather(x, axes)  # (P*P, ...)
+    r = lax.axis_index(row_ax)
+    c = lax.axis_index(col_ax)
+    return jnp.squeeze(lax.dynamic_slice_in_dim(g, c * pg + r, 1, 0), 0)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CollectiveEngine:
+    """Selects one registered schedule per collective op.
+
+    ``comm``      the paper's Fig. 1 backend selector. ``HOST_STAGED`` forces
+                  the ``staged`` schedule for every op (all bytes through the
+                  staging domain), matching the paper's PCIe+MPI bitstreams.
+    ``schedule``  a registered schedule name, or ``"auto"`` for the per-op
+                  defaults. A name registered for *some* ops only (e.g.
+                  ``chain`` has no dedicated ring_exchange variant) falls
+                  back to the op's auto default — so ``--schedule chain``
+                  applies suite-wide without per-op plumbing.
+    ``topology``  optional :class:`MeshTopology` for axis validation and
+                  result provenance (``describe()``).
+    ``interpret`` Pallas interpret flag for fused steps; None (default)
+                  resolves to compiled on TPU, interpret elsewhere — the
+                  same rule as :mod:`repro.kernels.ops`.
+    """
+    comm: CommunicationType = CommunicationType.ICI_DIRECT
+    schedule: str = "auto"
+    topology: Optional[MeshTopology] = None
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "comm", comm_type(self.comm))
+        if self.schedule != "auto" and self.schedule not in known_schedules():
+            raise UnknownScheduleError(
+                f"unknown schedule {self.schedule!r}; registered schedules "
+                f"are {sorted(known_schedules())}")
+
+    @classmethod
+    def for_mesh(cls, mesh, comm=CommunicationType.ICI_DIRECT,
+                 schedule: str = "auto", **kw) -> "CollectiveEngine":
+        return cls(comm=comm_type(comm), schedule=schedule,
+                   topology=MeshTopology.from_mesh(mesh), **kw)
+
+    # -- schedule resolution ------------------------------------------------
+
+    def schedule_for(self, op: str, override: Optional[str] = None) -> str:
+        """The schedule name this engine runs ``op`` with."""
+        if op not in OPS:
+            raise ValueError(f"unknown collective op {op!r}; ops are {OPS}")
+        if override is not None and override != "auto" \
+                and override not in _REGISTRY[op]:
+            # explicit per-call override must exist for the op — checked
+            # before the HOST_STAGED short-circuit so a typo'd override
+            # fails under every comm type, not only ICI_DIRECT
+            raise UnknownScheduleError(
+                f"schedule {override!r} is not registered for op {op!r}; "
+                f"available: {sorted(_REGISTRY[op])}")
+        if self.comm is CommunicationType.HOST_STAGED:
+            return "staged"
+        name = override or self.schedule
+        if name == "auto":
+            return _AUTO[op]
+        if name in _REGISTRY[op]:
+            return name
+        return _AUTO[op]  # engine-wide name that doesn't cover this op
+
+    def _resolve(self, op: str, override: Optional[str]) -> Callable:
+        return _REGISTRY[op][self.schedule_for(op, override)]
+
+    def _check_axis(self, axis):
+        if self.topology is None:
+            return
+        for name in (axis if isinstance(axis, (tuple, list)) else (axis,)):
+            self.topology.axis(name)  # raises KeyError with the known axes
+
+    # -- ops (all run inside shard_map bodies) ------------------------------
+
+    def bcast(self, val, axis, src, *, schedule: Optional[str] = None):
+        """Broadcast ``val`` from rank ``src`` (traced scalar ok) along
+        ``axis``."""
+        self._check_axis(axis)
+        return self._resolve("bcast", schedule)(self, val, axis, src)
+
+    def all_to_all_tiles(self, x, axis, *, split_axis: int, concat_axis: int,
+                         schedule: Optional[str] = None):
+        """Exchange tiles so rank i's j-th split lands on rank j, ordered by
+        source rank on ``concat_axis``."""
+        self._check_axis(axis)
+        return self._resolve("all_to_all_tiles", schedule)(
+            self, x, axis, split_axis=split_axis, concat_axis=concat_axis)
+
+    def allreduce(self, x, axis, *, schedule: Optional[str] = None):
+        """Sum ``x`` over all ranks of ``axis`` (a name or tuple of names)."""
+        self._check_axis(axis)
+        return self._resolve("allreduce", schedule)(self, x, axis)
+
+    def ring_exchange(self, x_fwd, x_bwd, axis, *,
+                      schedule: Optional[str] = None):
+        """Bidirectional neighbor exchange (b_eff pattern). Returns
+        (recv_from_left, recv_from_right)."""
+        self._check_axis(axis)
+        return self._resolve("ring_exchange", schedule)(
+            self, x_fwd, x_bwd, axis)
+
+    def grid_transpose(self, x, axes, pg: int, *,
+                       schedule: Optional[str] = None):
+        """Exchange with the (r,c)<->(c,r) partner on a ``pg`` x ``pg``
+        torus flattened over ``axes`` (PTRANS §2.2.2)."""
+        self._check_axis(axes)
+        return self._resolve("grid_transpose", schedule)(self, x, axes, pg)
+
+    # -- provenance ---------------------------------------------------------
+
+    def describe(self) -> Dict[str, object]:
+        """Static record of what this engine runs, for benchmark results."""
+        d = {
+            "comm": self.comm.value,
+            "schedule": self.schedule,
+            "resolved": {op: self.schedule_for(op) for op in OPS},
+        }
+        if self.topology is not None:
+            d["topology"] = self.topology.describe()
+        return d

@@ -7,10 +7,88 @@ XLA maps onto ICI.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# per-axis topology metadata (consumed by repro.comm.engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AxisTopology:
+    """Static description of one mesh axis as a communication domain.
+
+    ``kind`` is one of:
+      ``ring``      — 1-D wraparound ring (b_eff, DP gradient rings)
+      ``torus_row`` / ``torus_col`` — one dimension of a 2-D torus (HPL,
+                      PTRANS row/column broadcasts)
+      ``staging``   — a host-staged domain (the paper's PCIe+MPI network);
+                      schedules over it must route every byte through the
+                      staging implementation.
+    """
+    name: str
+    size: int
+    kind: str = "ring"
+
+    @property
+    def wraparound(self) -> bool:
+        return self.kind != "staging"
+
+    def perm(self, shift: int = 1) -> List[Tuple[int, int]]:
+        return ring_perm(self.size, shift)
+
+
+@dataclass(frozen=True)
+class MeshTopology:
+    """Topology metadata for every axis of a mesh, keyed by axis name.
+
+    Built host-side (outside shard_map); the engine consults it to validate
+    axis names, look up per-axis sizes, and record schedule provenance in
+    benchmark results.
+    """
+    axes: Tuple[AxisTopology, ...]
+
+    @classmethod
+    def from_mesh(cls, mesh, kinds: Optional[Dict[str, str]] = None
+                  ) -> "MeshTopology":
+        """Derive topology from a jax Mesh. ``kinds`` overrides the per-axis
+        classification; defaults: a lone axis is a ring, ('rows','cols') are
+        the 2-D torus dimensions, 'pod' is a staging domain."""
+        kinds = kinds or {}
+        default = {"rows": "torus_row", "cols": "torus_col", "pod": "staging"}
+        axes = []
+        for name, size in mesh.shape.items():
+            kind = kinds.get(name, default.get(name, "ring"))
+            axes.append(AxisTopology(name=name, size=int(size), kind=kind))
+        return cls(axes=tuple(axes))
+
+    def axis(self, name: str) -> AxisTopology:
+        for ax in self.axes:
+            if ax.name == name:
+                return ax
+        raise KeyError(
+            f"axis {name!r} not in topology "
+            f"(have {[a.name for a in self.axes]})")
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.axes)
+
+    def size(self, axis) -> int:
+        """Total ranks along ``axis`` (a name or tuple of names)."""
+        if isinstance(axis, (tuple, list)):
+            n = 1
+            for a in axis:
+                n *= self.axis(a).size
+            return n
+        return self.axis(axis).size
+
+    def describe(self) -> Dict[str, str]:
+        return {a.name: f"{a.kind}[{a.size}]" for a in self.axes}
 
 
 def ring_perm(size: int, shift: int = 1) -> List[Tuple[int, int]]:

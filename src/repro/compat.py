@@ -1,0 +1,72 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets the modern surface (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``, ``lax.axis_size``); the pinned
+container ships jax 0.4.37 where those live under older names. Everything
+version-sensitive is resolved here exactly once so the rest of the codebase
+imports from :mod:`repro.compat` and never branches on the jax version.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional
+
+import jax
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# shard_map: jax.shard_map (>= 0.5) vs jax.experimental.shard_map.shard_map
+# (<= 0.4.x); the replication-check kwarg was renamed check_rep -> check_vma.
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None,
+              **kwargs):
+    """``jax.shard_map`` under every supported jax; ``check_vma`` maps to
+    ``check_rep`` on releases that predate the rename."""
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# axis_size: lax.axis_size is new; psum of a python scalar constant-folds to
+# the static axis size on every release (works for tuple axes too).
+# ---------------------------------------------------------------------------
+
+
+def axis_size(axis) -> int:
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction: axis_types / AxisType only exist on newer releases.
+# ---------------------------------------------------------------------------
+
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported, plain mesh
+    otherwise (older jax is Auto-only, so the semantics match)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if "axis_types" in _MAKE_MESH_PARAMS and AXIS_TYPE_AUTO is not None:
+        kwargs["axis_types"] = (AXIS_TYPE_AUTO,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

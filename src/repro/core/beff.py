@@ -2,12 +2,15 @@
 
 Ring topology over all devices; message sizes 2^0 .. 2^max_log bytes are
 exchanged with both ring neighbors simultaneously; the derived metric is
-Eq. 1's effective bandwidth. Both communication backends are provided:
+Eq. 1's effective bandwidth. The neighbor exchange routes through the
+:class:`~repro.comm.engine.CollectiveEngine`:
 
-* ICI_DIRECT — ``ppermute`` neighbor streams (the IEC/CSN implementation,
-  paper Fig. 2: message chunks streamed to the neighbor, receive buffer
-  forwarded to the send side for the next round via the carried state).
-* HOST_STAGED — every message transits the staging domain (PCIe+MPI path).
+* ``direct`` schedule under ICI_DIRECT — ``ppermute`` neighbor streams (the
+  IEC/CSN implementation, paper Fig. 2: message chunks streamed to the
+  neighbor, receive buffer forwarded to the send side for the next round via
+  the carried state).
+* ``staged`` (forced by HOST_STAGED) — every message transits the staging
+  domain (PCIe+MPI path).
 
 Verification follows the paper: the message is filled with byte value
 ``log2(size) mod 256`` and checked after the timed run.
@@ -15,50 +18,52 @@ Verification follows the paper: the message is filled with byte value
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.comm.collectives import ring_exchange_bidir
+from repro.comm.engine import CollectiveEngine
 from repro.comm.types import CommunicationType
+from repro.compat import shard_map
 from repro.core import models
 from repro.core.hpcc import BenchResult, register, timeit
 
 
-def _exchange_step(bufs, axis: str, comm: CommunicationType, rounds: int):
+def _exchange_step(bufs, axis: str, engine: CollectiveEngine, rounds: int):
     """``rounds`` back-to-back bidirectional ring exchanges; the received
     buffers become the next round's send buffers (paper's internal-channel
     forwarding)."""
     def body(carry, _):
         fwd, bwd = carry
-        recv_l, recv_r = ring_exchange_bidir(fwd, bwd, axis, comm)
+        recv_l, recv_r = engine.ring_exchange(fwd, bwd, axis)
         return (recv_l, recv_r), ()
 
     (fwd, bwd), _ = jax.lax.scan(body, bufs, None, length=rounds)
     return fwd, bwd
 
 
-def make_step(mesh, comm: CommunicationType, rounds: int = 1):
+def make_step(mesh, engine: CollectiveEngine, rounds: int = 1):
     spec = P("x", None)
     fn = shard_map(
-        partial(_exchange_step, axis="x", comm=comm, rounds=rounds),
+        partial(_exchange_step, axis="x", engine=engine, rounds=rounds),
         mesh=mesh, in_specs=((spec, spec),), out_specs=(spec, spec))
     return jax.jit(fn)
 
 
 @register("b_eff")
 def run_beff(mesh, comm=CommunicationType.ICI_DIRECT, *, max_log: int = 20,
-             reps: int = 3, rounds: int = 4) -> BenchResult:
+             reps: int = 3, rounds: int = 4,
+             schedule: str = "auto") -> BenchResult:
     """Measured b_eff over the devices of ``mesh`` (axis 'x')."""
     n = mesh.devices.size
+    engine = CollectiveEngine.for_mesh(mesh, comm, schedule)
     bw: Dict[int, float] = {}
     times: Dict[str, float] = {}
     error = 0.0
-    step = make_step(mesh, comm, rounds)
+    step = make_step(mesh, engine, rounds)
     for lg in range(max_log + 1):
         L = 2 ** lg
         fill = np.uint8(lg % 256)
@@ -76,5 +81,7 @@ def run_beff(mesh, comm=CommunicationType.ICI_DIRECT, *, max_log: int = 20,
     return BenchResult(
         name="b_eff", metric_name="effective_bandwidth_B/s", metric=beff,
         error=error, times=times,
-        details={"bandwidth_by_size": bw, "devices": n, "comm": comm.value,
+        details={"bandwidth_by_size": bw, "devices": n,
+                 "comm": engine.comm.value,
+                 "schedule": engine.schedule_for("ring_exchange"),
                  "rounds": rounds})

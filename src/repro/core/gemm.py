@@ -12,10 +12,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.types import CommunicationType
+from repro.compat import shard_map
 from repro.core.hpcc import BenchResult, register, timeit
 from repro.kernels.ops import matmul
 

@@ -7,8 +7,9 @@ normalized residual ||Ax - b|| / (n * ||b|| * eps).
 Per iteration k (paper Fig. 4):
   1. the (k%P, k%P) device factorizes the diagonal block   [kernels/lu.py]
   2. the packed LU block is broadcast along its grid row and column
-     (the paper's "network kernels" forwarding through the torus — here the
-     store-and-forward ``ring_bcast('chain')`` or the native collective)
+     (the paper's "network kernels" forwarding through the torus — here
+     ``CollectiveEngine.bcast`` with the ``chain`` store-and-forward,
+     ``native``, or torus-aware ``ring2d`` scatter/all-gather schedule)
   3. grid row k%P solves the Top panel (U_kj), grid column k%P the Left
      panel (L_ik)                                          [trsm kernels]
   4. panels are broadcast down/across the torus
@@ -28,16 +29,17 @@ iteration k, so XLA can overlap the broadcasts with the bulk GEMM.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.comm.collectives import ring_bcast
-from repro.comm.types import CommunicationType, comm_type
+from repro.comm.engine import CollectiveEngine
+from repro.comm.types import CommunicationType
+from repro.compat import shard_map
 from repro.core.hpcc import BenchResult, register, timeit
 from repro.core.models import hpl_flops
 from repro.core.ptrans import distribute_cyclic, undistribute_cyclic
@@ -80,8 +82,8 @@ def normalized_residual(a: np.ndarray, x: np.ndarray, b: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _iteration(k, a, *, pg: int, b: int, lb: int, comm, schedule, interpret,
-               r, c, li_global, lj_global):
+def _iteration(k, a, *, pg: int, b: int, lb: int, engine: CollectiveEngine,
+               interpret, r, c, li_global, lj_global):
     m = lb * b
     pk = k % pg
     lk = k // pg
@@ -89,22 +91,22 @@ def _iteration(k, a, *, pg: int, b: int, lb: int, comm, schedule, interpret,
     # 1. diagonal block (speculative on every device; selected by bcast)
     diag = lax.dynamic_slice(a, (lk * b, lk * b), (b, b))
     lu_local = lu_factor_block(diag, interpret=interpret)
-    lu_blk = ring_bcast(lu_local, "cols", pk, comm, schedule)
-    lu_blk = ring_bcast(lu_blk, "rows", pk, comm, schedule)
+    lu_blk = engine.bcast(lu_local, "cols", pk)
+    lu_blk = engine.bcast(lu_blk, "rows", pk)
 
     # 2. Top panel: U_kj = L_kk^{-1} A_kj on grid row pk, cols j > k
     row_panel = lax.dynamic_slice(a, (lk * b, 0), (b, m))
     u_panel = trsm_lower_left(lu_blk, row_panel, interpret=interpret)
     colmask = jnp.repeat(lj_global > k, b)  # (m,)
     u_panel = u_panel * colmask[None, :]
-    u_panel = ring_bcast(u_panel, "rows", pk, comm, schedule)
+    u_panel = engine.bcast(u_panel, "rows", pk)
 
     # 3. Left panel: L_ik = A_ik U_kk^{-1} on grid col pk, rows i > k
     col_panel = lax.dynamic_slice(a, (0, lk * b), (m, b))
     l_panel = trsm_upper_right(lu_blk, col_panel, interpret=interpret)
     rowmask = jnp.repeat(li_global > k, b)
     l_panel = l_panel * rowmask[:, None]
-    l_panel = ring_bcast(l_panel, "cols", pk, comm, schedule)
+    l_panel = engine.bcast(l_panel, "cols", pk)
 
     # 4. trailing update: masks zero the factored rows/cols
     a = gemm_update(a, l_panel, u_panel, alpha=-1.0, interpret=interpret)
@@ -126,8 +128,8 @@ def _iteration(k, a, *, pg: int, b: int, lb: int, comm, schedule, interpret,
     return a
 
 
-def _hpl_body(a_loc, *, pg: int, nb: int, b: int, comm: CommunicationType,
-              schedule: str, interpret: bool):
+def _hpl_body(a_loc, *, pg: int, nb: int, b: int, engine: CollectiveEngine,
+              interpret: bool):
     a = a_loc[0]
     lb = nb // pg
     r = lax.axis_index("rows")
@@ -135,8 +137,8 @@ def _hpl_body(a_loc, *, pg: int, nb: int, b: int, comm: CommunicationType,
     li_global = jnp.arange(lb) * pg + r
     lj_global = jnp.arange(lb) * pg + c
 
-    step = partial(_iteration, pg=pg, b=b, lb=lb, comm=comm,
-                   schedule=schedule, interpret=interpret, r=r, c=c,
+    step = partial(_iteration, pg=pg, b=b, lb=lb, engine=engine,
+                   interpret=interpret, r=r, c=c,
                    li_global=li_global, lj_global=lj_global)
     a = lax.fori_loop(0, nb, step, a)
     return a[None]
@@ -144,11 +146,13 @@ def _hpl_body(a_loc, *, pg: int, nb: int, b: int, comm: CommunicationType,
 
 def make_factorize(mesh, *, pg: int, nb: int, b: int,
                    comm=CommunicationType.ICI_DIRECT, schedule: str = "chain",
-                   interpret: bool = True):
+                   interpret: bool = True, engine: CollectiveEngine = None):
+    engine = engine or CollectiveEngine.for_mesh(mesh, comm, schedule,
+                                                 interpret=interpret)
     spec = P(("rows", "cols"), None, None)
     fn = shard_map(
-        partial(_hpl_body, pg=pg, nb=nb, b=b, comm=comm_type(comm),
-                schedule=schedule, interpret=interpret),
+        partial(_hpl_body, pg=pg, nb=nb, b=b, engine=engine,
+                interpret=interpret),
         mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False)
     return jax.jit(fn)
 
@@ -162,14 +166,15 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
     assert mesh.shape["cols"] == pg, "paper requires a quadratic torus"
     nb = n // b
     assert nb % pg == 0, (n, b, pg)
-    comm = comm_type(comm)
+    engine = CollectiveEngine.for_mesh(mesh, comm, schedule,
+                                       interpret=interpret)
 
     a, x_true, b_vec = generate_system(n)
     spec = NamedSharding(mesh, P(("rows", "cols"), None, None))
     a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
 
-    fact = make_factorize(mesh, pg=pg, nb=nb, b=b, comm=comm,
-                          schedule=schedule, interpret=interpret)
+    fact = make_factorize(mesh, pg=pg, nb=nb, b=b, engine=engine,
+                          interpret=interpret)
     out, t = timeit(fact, a_sh, reps=reps)
 
     err = 0.0
@@ -181,5 +186,5 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
     return BenchResult(
         name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
         error=err, times={"best": t},
-        details={"n": n, "block": b, "grid": pg, "comm": comm.value,
-                 "schedule": schedule})
+        details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
+                 "schedule": engine.schedule_for("bcast")})

@@ -46,7 +46,9 @@ def lu_blocked(a: jnp.ndarray, b: int, *, interpret: bool = True) -> jnp.ndarray
 @register("hpl_single")
 def run_hpl_single(mesh=None, comm=None, *, n: int = 512, b: int = 64,
                    reps: int = 2, interpret: bool = True,
-                   validate: bool = True) -> BenchResult:
+                   validate: bool = True, schedule: str = "auto") -> BenchResult:
+    # single device: no communication — ``schedule`` is accepted so the
+    # drivers can pass one flag suite-wide; recorded as "local" in results.
     a, x_true, b_vec = generate_system(n)
     a_dev = jnp.asarray(a)
     fn = jax.jit(partial(lu_blocked, b=b, interpret=interpret))
@@ -59,4 +61,5 @@ def run_hpl_single(mesh=None, comm=None, *, n: int = 512, b: int = 64,
 
     return BenchResult(
         name="hpl_single", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
-        error=err, times={"best": t}, details={"n": n, "block": b})
+        error=err, times={"best": t},
+        details={"n": n, "block": b, "schedule": "local"})

@@ -8,26 +8,27 @@ single exchange with the grid-transpose partner, and the local compute is
 one full-matrix transpose-add — tile(lj,li)^T lands at (li,lj) for both the
 block index level and the within-block level at once.
 
-Backends:
-* ICI_DIRECT — one ``ppermute`` over ('rows','cols') with the transpose
-  permutation: a pure point-to-point circuit-switched exchange (paper
-  §2.2.2).
-* HOST_STAGED — all_gather over the full grid + local selection: every block
-  transits the staging domain (paper §2.2.1 via PCIe+MPI).
+The exchange routes through the :class:`~repro.comm.engine.CollectiveEngine`
+``grid_transpose`` op:
+* ``direct`` schedule under ICI_DIRECT — one ``ppermute`` over
+  ('rows','cols') with the transpose permutation: a pure point-to-point
+  circuit-switched exchange (paper §2.2.2).
+* ``staged`` (forced by HOST_STAGED) — all_gather over the full grid + local
+  selection: every block transits the staging domain (paper §2.2.1 via
+  PCIe+MPI).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.comm.topology import transpose_perm
-from repro.comm.types import CommunicationType, comm_type
+from repro.comm.engine import CollectiveEngine
+from repro.comm.types import CommunicationType
+from repro.compat import shard_map
 from repro.core.hpcc import BenchResult, register, timeit
 from repro.kernels.ops import transpose_add
 
@@ -74,36 +75,31 @@ def undistribute_cyclic(shards: np.ndarray, pg: int, b: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _ptrans_body(a_loc, b_loc, *, pg: int, comm: CommunicationType,
+def _ptrans_body(a_loc, b_loc, *, pg: int, engine: CollectiveEngine,
                  interpret: bool):
     a_loc, b_loc = a_loc[0], b_loc[0]
-    if comm is CommunicationType.ICI_DIRECT:
-        recv = lax.ppermute(a_loc, ("rows", "cols"), transpose_perm(pg))
-    else:
-        g = lax.all_gather(a_loc, ("rows", "cols"))  # (P*P, m, m)
-        r = lax.axis_index("rows")
-        c = lax.axis_index("cols")
-        recv = jnp.squeeze(lax.dynamic_slice_in_dim(g, c * pg + r, 1, 0), 0)
+    recv = engine.grid_transpose(a_loc, ("rows", "cols"), pg)
     out = transpose_add(recv, b_loc, interpret=interpret)
     return out[None]
 
 
-def make_step(mesh, pg: int, comm: CommunicationType, interpret: bool = True):
+def make_step(mesh, pg: int, engine: CollectiveEngine, interpret: bool = True):
     spec = P(("rows", "cols"), None, None)
-    fn = shard_map(partial(_ptrans_body, pg=pg, comm=comm, interpret=interpret),
-                   mesh=mesh, in_specs=(spec, spec), out_specs=spec,
-                   check_vma=False)
+    fn = shard_map(
+        partial(_ptrans_body, pg=pg, engine=engine, interpret=interpret),
+        mesh=mesh, in_specs=(spec, spec), out_specs=spec, check_vma=False)
     return jax.jit(fn)
 
 
 @register("ptrans")
 def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
                b: int = 128, reps: int = 3, interpret: bool = True,
-               validate: bool = True) -> BenchResult:
+               validate: bool = True, schedule: str = "auto") -> BenchResult:
     """mesh must have axes ('rows', 'cols') with equal sizes (P = Q)."""
     pg = mesh.shape["rows"]
     assert mesh.shape["cols"] == pg, "paper requires P = Q"
-    comm = comm_type(comm)
+    engine = CollectiveEngine.for_mesh(mesh, comm, schedule,
+                                       interpret=interpret)
     rng = np.random.default_rng(42)
     a = rng.standard_normal((n, n), dtype=np.float32)
     bm = rng.standard_normal((n, n), dtype=np.float32)
@@ -112,7 +108,7 @@ def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
     a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
     b_sh = jax.device_put(distribute_cyclic(bm, pg, b), spec)
 
-    step = make_step(mesh, pg, comm, interpret)
+    step = make_step(mesh, pg, engine, interpret)
     out, t = timeit(step, a_sh, b_sh, reps=reps)
 
     err = 0.0
@@ -125,5 +121,6 @@ def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
     return BenchResult(
         name="ptrans", metric_name="GFLOP/s", metric=flops / t / 1e9,
         error=err, times={"best": t},
-        details={"n": n, "block": b, "grid": pg, "comm": comm.value,
+        details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
+                 "schedule": engine.schedule_for("grid_transpose"),
                  "bytes_exchanged": float(n) * n * 4})

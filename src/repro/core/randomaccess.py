@@ -20,10 +20,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.types import CommunicationType
+from repro.compat import shard_map
 from repro.core.hpcc import BenchResult, register, timeit
 
 # 32-bit variant of the HPCC LCG (JAX default disables x64; the generator is

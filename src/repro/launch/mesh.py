@@ -5,9 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,29 +14,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     domain — the paper's PCIe+MPI network)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(axes=("data", "model")):
     """Best-effort mesh over however many local devices exist (tests/benches)."""
     n = len(jax.devices())
     if len(axes) == 1:
-        return jax.make_mesh((n,), tuple(axes), axis_types=_auto(1))
+        return _make_mesh((n,), tuple(axes))
     # squarest 2-way factorization
     a = int(np.floor(np.sqrt(n)))
     while n % a:
         a -= 1
-    return jax.make_mesh((n // a, a), tuple(axes), axis_types=_auto(len(axes)))
+    return _make_mesh((n // a, a), tuple(axes))
 
 
 def make_ring_mesh(name: str = "x"):
     n = len(jax.devices())
-    return jax.make_mesh((n,), (name,), axis_types=_auto(1))
+    return _make_mesh((n,), (name,))
 
 
 def make_torus_mesh(pg: int, names=("rows", "cols")):
-    return jax.make_mesh((pg, pg), tuple(names), axis_types=_auto(2))
+    return _make_mesh((pg, pg), tuple(names))

@@ -178,6 +178,7 @@ def _flash_sharded(q, k, v, *, shard, causal: bool):
     materialization that dominates every prefill cell's HBM term (§Perf
     iteration A2). Returns None when this sharding is not applicable."""
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.kernels import ops as kops
 
     mesh = getattr(shard, "mesh", None)
@@ -214,8 +215,8 @@ def _flash_sharded(q, k, v, *, shard, causal: bool):
                                     bq=min(512, q_.shape[1]),
                                     bk=min(512, k_.shape[1]))
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
-                       out_specs=qspec, check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                   out_specs=qspec, check_vma=False)
     return fn(q, k, v)
 
 

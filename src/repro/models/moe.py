@@ -10,8 +10,10 @@ Sharding intent under pjit (see repro/sharding.py):
   tokens  (B, S, D)   : B -> ('pod','data')
   experts (E, D, F)   : E -> 'model'  (expert parallelism)
   dispatch buffer (B, E, C, D): B -> data, E -> model  (GSPMD inserts the
-  expert all-to-all-equivalent resharding; the explicit shard_map all_to_all
-  schedule lives in repro/comm and is used by the optimized path).
+  expert all-to-all-equivalent resharding; the explicit schedule is
+  :func:`exchange_dispatch` / :func:`exchange_combine` below, which route the
+  buffer through ``CollectiveEngine.all_to_all_tiles`` inside ``shard_map``
+  with a named schedule — ``native``, paper-style ``chain``, or ``staged``).
 """
 from __future__ import annotations
 
@@ -21,7 +23,33 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.engine import CollectiveEngine
 from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# explicit expert-parallel dispatch (shard_map path)
+# ---------------------------------------------------------------------------
+
+
+def exchange_dispatch(buf: jnp.ndarray, axis: str,
+                      engine: CollectiveEngine) -> jnp.ndarray:
+    """Route a locally-built dispatch buffer to its expert owners.
+
+    Inside ``shard_map`` over ``axis`` each rank holds tokens for *all*
+    experts, ``buf`` = (B_loc, E, C, D). The exchange splits the expert dim
+    across ranks and concatenates the batch shards, returning
+    (B, E_loc, C, D): rank e now holds every rank's tokens for its experts —
+    the MoE all-to-all, under whichever schedule the engine selects.
+    """
+    return engine.all_to_all_tiles(buf, axis, split_axis=1, concat_axis=0)
+
+
+def exchange_combine(buf: jnp.ndarray, axis: str,
+                     engine: CollectiveEngine) -> jnp.ndarray:
+    """Inverse of :func:`exchange_dispatch`: return expert outputs
+    (B, E_loc, C, D) to the token-owning ranks as (B_loc, E, C, D)."""
+    return engine.all_to_all_tiles(buf, axis, split_axis=0, concat_axis=1)
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:

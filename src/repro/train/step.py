@@ -29,8 +29,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as sh
 from repro.comm import compression
-from repro.comm.collectives import psum_schedule
+from repro.comm.engine import CollectiveEngine
 from repro.comm.types import CommunicationType, comm_type
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models.model import Model, next_token_loss
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
@@ -170,15 +171,19 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
                                 total_steps: int = 10_000) -> Callable:
     """Pure data-parallel step with hand-written gradient reduction.
 
-    ``run_cfg.comm_type`` picks ICI_DIRECT vs HOST_STAGED; ``schedule_kind``
-    picks native/chain within ICI_DIRECT; ``run_cfg.grad_compression`` turns
-    on the int8 error-feedback reduction (beyond-paper).
+    The gradient all-reduce routes through the
+    :class:`~repro.comm.engine.CollectiveEngine`: ``run_cfg.comm_type`` picks
+    ICI_DIRECT vs HOST_STAGED, ``schedule_kind`` names the registered
+    reduction schedule (``native`` / ``chain`` ring / ``rs_ag`` fused ring /
+    ``staged``); ``run_cfg.grad_compression`` turns on the int8
+    error-feedback reduction (beyond-paper).
     """
     adamw = adamw or AdamWConfig(lr=run_cfg.learning_rate,
                                  weight_decay=run_cfg.weight_decay,
                                  max_grad_norm=run_cfg.max_grad_norm)
     schedule = make_lr_schedule(adamw.lr, run_cfg.warmup_steps, total_steps)
-    ct = comm_type(run_cfg.comm_type)
+    engine = CollectiveEngine.for_mesh(mesh, comm_type(run_cfg.comm_type),
+                                       schedule_kind)
     compress = run_cfg.grad_compression == "int8_ef"
     ndev = mesh.shape[axis]
 
@@ -202,10 +207,10 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
             new_error = jax.tree.unflatten(treedef, errs)
         else:
             grads = jax.tree.map(
-                lambda g: psum_schedule(g.astype(jnp.float32) / ndev, axis,
-                                        ct, schedule_kind), grads)
+                lambda g: engine.allreduce(g.astype(jnp.float32) / ndev, axis),
+                grads)
             new_error = state.error
-        loss = psum_schedule(loss / ndev, axis, ct, schedule_kind)
+        loss = engine.allreduce(loss / ndev, axis)
 
         grads, gnorm = clip_by_global_norm(grads, adamw.max_grad_norm)
         lr = schedule(state.step)
@@ -229,7 +234,7 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
         )
         batch_spec = {k: P(axis) for k in batch}
         metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
-        fn = jax.shard_map(
+        fn = shard_map(
             step_body, mesh=mesh,
             in_specs=(st_spec, batch_spec),
             out_specs=(st_spec, metrics_spec),

@@ -139,8 +139,10 @@ def test_microbatch_grads_match():
         outs[nm] = (float(m["loss"]), jax.tree.leaves(st.params)[0])
     np.testing.assert_allclose(outs[1][0], outs[2][0], rtol=1e-5)
     np.testing.assert_allclose(outs[1][0], outs[4][0], rtol=1e-5)
+    # atol admits the reduction-order jitter of the multi-device CPU runtime
+    # (CI runs the suite under 8 placeholder devices; threading differs)
     np.testing.assert_allclose(np.asarray(outs[1][1]), np.asarray(outs[4][1]),
-                               atol=1e-5)
+                               atol=5e-5)
 
 
 @pytest.mark.parametrize("remat", ["none", "full", "dots"])

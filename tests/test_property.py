@@ -4,7 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import compression
 from repro.core import models
