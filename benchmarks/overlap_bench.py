@@ -1,0 +1,135 @@
+"""Paper Figs. 5/7 analogue — communication/compute overlap benchmarks.
+
+Two overlap structures, both engine-driven:
+
+1. **HPL lookahead vs eager** per registered bcast schedule: the lookahead
+   factorization issues iteration k+1's panel broadcasts before iteration
+   k's bulk trailing GEMM (the paper's headline LINPACK optimization), so
+   XLA can hide the chain/ring2d hops behind the update. Output is
+   bit-identical to eager mode by construction.
+
+2. **Bucketed vs monolithic gradient reduction** per registered allreduce
+   schedule: ``CollectiveEngine.allreduce_tree`` packs a synthetic gradient
+   pytree into buckets; independent buckets give the backward-overlap
+   structure, a single monolithic bucket is the baseline, leaf-wise is the
+   pathological many-small-collectives end.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+from benchmarks.common import ensure_devices, fmt_bytes, save_result, table
+
+ensure_devices()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.comm.engine import CollectiveEngine, schedules_for  # noqa: E402
+from repro.comm.overlap import tree_bytes  # noqa: E402
+from repro.comm.types import CommunicationType as CT  # noqa: E402
+from repro.compat import make_mesh, shard_map  # noqa: E402
+from repro.core.hpcc import timeit  # noqa: E402
+from repro.core.hpl import run_hpl  # noqa: E402
+from repro.launch.mesh import make_torus_mesh  # noqa: E402
+
+
+def _hpl_lookahead(quick: bool, schedules, record):
+    n = 256 if quick else 512
+    b = 64
+    g = 2
+    if not schedules:
+        return
+    if len(jax.devices()) < g * g:
+        print("-- skipping HPL lookahead (needs 4 devices) --")
+        return
+    mesh = make_torus_mesh(g)
+    print(f"== HPL lookahead vs eager (paper Figs. 5/7), n={n}, "
+          f"{g}x{g} torus ==")
+    rows = []
+    for schedule in schedules:
+        perf = {}
+        for lookahead in (False, True):
+            res = run_hpl(mesh, CT.ICI_DIRECT, n=n, b=b, schedule=schedule,
+                          reps=1, lookahead=lookahead)
+            mode = "lookahead" if lookahead else "eager"
+            perf[mode] = res.metric
+            record[f"hpl/{schedule}/{mode}"] = {
+                "n": n, "gflops": res.metric, "err": res.error,
+                "time": res.times["best"]}
+        rows.append([schedule, f"{perf['eager']:.3f}",
+                     f"{perf['lookahead']:.3f}",
+                     f"{perf['lookahead'] / perf['eager']:.2f}x"])
+    print(table(rows, ["bcast schedule", "eager GFLOP/s",
+                       "lookahead GFLOP/s", "ratio"]))
+    print()
+
+
+def _grad_tree(quick: bool):
+    """Synthetic gradient pytree shaped like a small LM backward pass:
+    a few large matmul grads plus a tail of small bias/norm grads."""
+    scale = 1 if quick else 4
+    rng = np.random.default_rng(0)
+    tree = {}
+    for i in range(4 * scale):
+        tree[f"layer{i}/w"] = rng.integers(
+            -8, 8, (128, 256)).astype(np.float32)
+        tree[f"layer{i}/b"] = rng.integers(-8, 8, (256,)).astype(np.float32)
+        tree[f"layer{i}/ln"] = rng.integers(-8, 8, (128,)).astype(np.float32)
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def _bucketed_reduction(quick: bool, schedules, record):
+    if not schedules:
+        return
+    ndev = len(jax.devices())
+    mesh = make_mesh((ndev,), ("x",))
+    tree = _grad_tree(quick)
+    total = tree_bytes(tree)
+    nleaves = len(jax.tree.leaves(tree))
+    # monolithic = one bucket; bucketed = a few buckets; leafwise = 1 B cap
+    bucket_modes = {"monolithic": 1 << 40, "bucketed": max(total // 4, 1),
+                    "leafwise": 1}
+    print(f"== bucketed vs monolithic gradient reduction "
+          f"({nleaves} leaves, {fmt_bytes(total)}, ring of {ndev}) ==")
+    rows = []
+    for schedule in schedules:
+        eng = CollectiveEngine.for_mesh(mesh, schedule=schedule)
+        times = {}
+        for mode, bucket_bytes in bucket_modes.items():
+            fn = jax.jit(shard_map(
+                partial(eng.allreduce_tree, axis="x",
+                        bucket_bytes=bucket_bytes),
+                mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False))
+            _, t = timeit(fn, tree, reps=2 if quick else 3)
+            times[mode] = t
+            record[f"reduce/{schedule}/{mode}"] = {
+                "bytes": total, "leaves": nleaves, "time": t,
+                "gbps": total / t / 1e9}
+        rows.append([schedule] + [f"{times[m] * 1e3:.2f}ms"
+                                  for m in bucket_modes]
+                    + [f"{times['monolithic'] / times['bucketed']:.2f}x"])
+    print(table(rows, ["allreduce schedule"] + list(bucket_modes)
+                + ["mono/bucketed"]))
+    print()
+
+
+def main(quick: bool = False, schedule=None):
+    record = {}
+    bcasts = [s for s in schedules_for("bcast") if s != "staged"]
+    reduces = [s for s in schedules_for("allreduce") if s != "staged"]
+    if schedule is not None:  # sweep mode: restrict to the swept schedule;
+        # a schedule with no counterpart for an op skips that half rather
+        # than duplicating another schedule's measurement in the sweep
+        bcasts = [s for s in bcasts if s == schedule]
+        reduces = [s for s in reduces if s == schedule]
+    _hpl_lookahead(quick, bcasts, record)
+    _bucketed_reduction(quick, reduces, record)
+    save_result("overlap_bench", record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -23,10 +23,15 @@ def main(quick: bool = False, schedule=None):
 
     print("== PTRANS scaling (paper Fig. 12) ==")
     record = {}
+    # HOST_STAGED forces the `staged` schedule, so an explicit other
+    # schedule (e.g. a --sweep-schedules pass) would re-run byte-identical
+    # host-staged configs — skip them in that case
+    comms = ((CT.ICI_DIRECT,) if schedule not in (None, "auto", "staged")
+             else (CT.ICI_DIRECT, CT.HOST_STAGED))
     for label, strong in (("strong", True), ("weak", False)):
         rows = []
         base_perf = {}
-        for ct in (CT.ICI_DIRECT, CT.HOST_STAGED):
+        for ct in comms:
             for g in grids:
                 n = n_base if strong else n_base * g
                 if n % (g * b):

@@ -1,10 +1,19 @@
 """Benchmark driver:
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--schedule NAME]``.
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--schedule NAME]
+[--sweep-schedules] [modules...]``.
 
 ``--schedule`` selects a registered collective-engine schedule (``chain``,
-``native``, ``staged``, ``ring2d``, ``rs_ag``; see repro.comm.engine) for
-every benchmark that communicates; the engine's resolved schedule name is
-recorded in each result file.
+``native``, ``staged``, ``ring2d``, ``rs_ag``, ``int8_ef``; see
+repro.comm.engine) for every benchmark that communicates; the engine's
+resolved schedule name is recorded in each result file.
+
+``--sweep-schedules`` instead runs each selected benchmark once per schedule
+registered for its primary collective op and emits one comparison table per
+benchmark (the paper's Figs. 10-16 with schedules as columns), saved to
+``results/bench/schedule_sweep.json``.
+
+Module arguments accept short aliases: ``hpl`` -> hpl_scaling, ``ptrans`` ->
+ptrans_scaling, ``beff`` -> beff_bandwidth, ``overlap`` -> overlap_bench.
 
 One module per paper table/figure (DESIGN.md §6):
   beff_bandwidth   Fig. 10/11 + Eqs. 1/2/4
@@ -14,6 +23,7 @@ One module per paper table/figure (DESIGN.md §6):
   legacy_suite     Fig. 16
   resource_table   Table 7 analogue (production-mesh compiled footprints)
   lm_step_bench    beyond-paper LM roofline table
+  overlap_bench    Figs. 5/7 analogue (lookahead HPL + bucketed reduction)
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ import sys
 import time
 import traceback
 
-from benchmarks.common import ensure_devices
+from benchmarks.common import ensure_devices, save_result, table
 
 ensure_devices()  # 8 placeholder CPU devices for every measured benchmark
 
@@ -33,7 +43,29 @@ MODULES = [
     "legacy_suite",
     "resource_table",
     "lm_step_bench",
+    "overlap_bench",
 ]
+
+ALIASES = {
+    "hpl": "hpl_scaling",
+    "ptrans": "ptrans_scaling",
+    "beff": "beff_bandwidth",
+    "overlap": "overlap_bench",
+    "lm": "lm_step_bench",
+}
+
+# primary collective op per module: --sweep-schedules runs the module once
+# per schedule registered for that op (None = no communication to sweep)
+SWEEP_OPS = {
+    "beff_bandwidth": "ring_exchange",
+    "ptrans_scaling": "grid_transpose",
+    "hpl_matrix_sweep": "bcast",
+    "hpl_scaling": "bcast",
+    "legacy_suite": None,      # embarrassingly parallel — ignores schedule
+    "resource_table": None,
+    "lm_step_bench": None,     # GSPMD path — XLA picks the collectives
+    "overlap_bench": "allreduce",
+}
 
 
 def _parse_schedule(argv):
@@ -58,24 +90,91 @@ def _parse_schedule(argv):
     return schedule, rest
 
 
+def _run_module(name, quick, schedule):
+    print("\n" + "=" * 78)
+    print(f"### benchmarks.{name}"
+          + (f" (schedule={schedule})" if schedule else ""))
+    print("=" * 78)
+    t0 = time.time()
+    mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+    record = mod.main(quick=quick, schedule=schedule)
+    print(f"[{name} done in {time.time() - t0:.1f}s]")
+    return record
+
+
+def _metric_rows(record):
+    """(key, gflops-like scalar) pairs from a benchmark record, for the
+    cross-schedule comparison table."""
+    rows = []
+    for key, val in (record or {}).items():
+        if isinstance(val, dict):
+            for field in ("gflops", "gbps", "gups", "bandwidth_gbs", "time"):
+                if field in val:
+                    rows.append((key, field, float(val[field])))
+                    break
+    return rows
+
+
+def _sweep(modules, quick):
+    from repro.comm.engine import schedules_for
+    sweep_record = {}
+    failures = []
+    for name in modules:
+        op = SWEEP_OPS.get(name)
+        schedules = list(schedules_for(op)) if op else [None]
+        per_schedule = {}
+        for s in schedules:
+            try:
+                per_schedule[s or "default"] = _run_module(name, quick, s)
+            except Exception:  # noqa: BLE001
+                failures.append(f"{name}[{s}]")
+                print(f"[{name} schedule={s} FAILED]\n"
+                      f"{traceback.format_exc()[-3000:]}")
+        sweep_record[name] = per_schedule
+
+        # one comparison table per module: record keys x schedules
+        cols = list(per_schedule)
+        cells = {}
+        metric_field = {}
+        for s, rec in per_schedule.items():
+            for key, field, v in _metric_rows(rec):
+                cells.setdefault(key, {})[s] = v
+                metric_field[key] = field
+        if cells:
+            print(f"\n-- {name}: schedule comparison "
+                  f"({op or 'no collective op'}) --")
+            rows = [[key, metric_field[key]]
+                    + [f"{cells[key].get(s, float('nan')):.4g}" for s in cols]
+                    for key in cells]
+            print(table(rows, ["config", "metric"] + cols))
+    save_result("schedule_sweep", sweep_record)
+    return failures
+
+
 def main():
     schedule, argv = _parse_schedule(sys.argv[1:])
     quick = "--quick" in argv
-    only = [a for a in argv if not a.startswith("-")]
-    failures = []
-    for name in (only or MODULES):
-        print("\n" + "=" * 78)
-        print(f"### benchmarks.{name}"
-              + (f" (schedule={schedule})" if schedule else ""))
-        print("=" * 78)
-        t0 = time.time()
-        try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=quick, schedule=schedule)
-            print(f"[{name} done in {time.time() - t0:.1f}s]")
-        except Exception:  # noqa: BLE001
-            failures.append(name)
-            print(f"[{name} FAILED]\n{traceback.format_exc()[-3000:]}")
+    sweep = "--sweep-schedules" in argv
+    only = [ALIASES.get(a, a) for a in argv if not a.startswith("-")]
+    for name in only:
+        if name not in MODULES:
+            raise SystemExit(f"unknown benchmark {name!r}; modules are "
+                             f"{MODULES} (aliases: {ALIASES})")
+    modules = only or MODULES
+
+    if sweep:
+        if schedule is not None:
+            raise SystemExit("--sweep-schedules and --schedule are "
+                             "mutually exclusive")
+        failures = _sweep(modules, quick)
+    else:
+        failures = []
+        for name in modules:
+            try:
+                _run_module(name, quick, schedule)
+            except Exception:  # noqa: BLE001
+                failures.append(name)
+                print(f"[{name} FAILED]\n{traceback.format_exc()[-3000:]}")
     print("\n" + "=" * 78)
     if failures:
         print("FAILED:", failures)

@@ -8,7 +8,7 @@ than fp32, 2x fewer than bf16).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +40,21 @@ def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, size: int) -> jnp.ndar
     return x.reshape(shape)
 
 
-def compressed_psum(x: jnp.ndarray, axis: str,
-                    error: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def compressed_psum(x: jnp.ndarray, axis: str, error: jnp.ndarray, *,
+                    engine=None, schedule: Optional[str] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-reduce ``x`` (fp32) over ``axis`` with int8 payload + error feedback.
 
     Returns (reduced, new_error). ``error`` has the same shape as ``x``.
     Payload on the wire: 1 byte/elem + 4/BLOCK bytes/elem of scales, vs 4
     bytes/elem uncompressed.
+
+    With ``engine`` (a :class:`~repro.comm.engine.CollectiveEngine`), the
+    wire payload rides the engine's registered allreduce schedule — error
+    feedback composed with the ``chain``/``rs_ag``/``ring2d`` rings instead
+    of a hard-wired ``lax.psum``. ``schedule`` overrides the engine's choice;
+    ``int8_ef`` (this transform registered as a stateless engine schedule)
+    is remapped to its ``rs_ag`` transport to avoid double quantization.
     """
     target = x.astype(jnp.float32) + error.astype(jnp.float32)
     q, scale = quantize(target)
@@ -55,7 +63,13 @@ def compressed_psum(x: jnp.ndarray, axis: str,
     # int8 values cannot be summed in int8 without overflow across ranks;
     # reduce the dequantized representation (the *wire* payload is what the
     # roofline counts; see roofline.collective_bytes notes).
-    reduced = lax.psum(sent, axis)
+    if engine is None:
+        reduced = lax.psum(sent, axis)
+    else:
+        inner = schedule or engine.schedule_for("allreduce")
+        if inner == "int8_ef":
+            inner = "rs_ag"
+        reduced = engine.allreduce(sent, axis, schedule=inner)
     return reduced, new_error
 
 

@@ -14,6 +14,9 @@ Ops
 ``bcast(val, axis, src)``                     one-to-all along a ring/torus dim
 ``all_to_all_tiles(x, axis, split/concat)``   PTRANS / MoE dispatch exchange
 ``allreduce(x, axis)``                        gradient / scalar reduction
+``allreduce_tree(tree, axis, bucket_bytes)``  bucketed pytree reduction — the
+                                              overlap structure of the paper's
+                                              Fig. 5/7 applied to gradients
 ``ring_exchange(fwd, bwd, axis)``             b_eff bidirectional neighbor swap
 ``grid_transpose(x, axes, pg)``               PTRANS partner exchange on a torus
 
@@ -28,10 +31,15 @@ Schedules
 ``ring2d``  torus-aware two-phase ring schedules: bcast = scatter +
             ring all-gather (2(n-1)/n wire vs chain's (n-1)); allreduce =
             per-torus-dimension ring reduce-scatter/all-gather, applied
-            row-then-column for tuple axes.
+            row-then-column for tuple axes; grid_transpose = dimension-
+            ordered row-hop-then-column-hop route to the transpose partner
+            (paper Fig. 8's two-phase torus route).
 ``rs_ag``   bandwidth-optimal ring reduce-scatter + all-gather allreduce;
             the per-hop accumulate is the Pallas-fused step in
             :mod:`repro.kernels.ring`.
+``int8_ef`` int8 block-quantized allreduce wire format riding the ``rs_ag``
+            ring (error feedback is carried by the caller — see
+            :func:`repro.comm.compression.compressed_psum`).
 ``direct``  point-to-point ``ppermute`` (ring_exchange / grid_transpose).
 
 Registering a new schedule::
@@ -52,9 +60,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.comm.overlap import DEFAULT_BUCKET_BYTES, pack_buckets
 from repro.comm.topology import MeshTopology, ring_perm, transpose_perm
 from repro.comm.types import CommunicationType, comm_type
 from repro.compat import axis_size
@@ -132,8 +142,6 @@ def _set_chunk(stack, k, val):
 
 def _fused_add(engine, acc, recv):
     if jnp.issubdtype(acc.dtype, jnp.floating):
-        import jax
-
         from repro.kernels.ring import fused_chunk_add
         interp = engine.interpret
         if interp is None:  # auto: compile on TPU, interpret elsewhere
@@ -327,6 +335,21 @@ def _allreduce_ring2d(engine, x, axis):
     return _allreduce_rs_ag(engine, x, axis)
 
 
+@register_schedule("allreduce", "int8_ef")
+def _allreduce_int8_ef(engine, x, axis):
+    # int8 block-quantized wire format over the bandwidth-optimal ring: the
+    # payload is quantized once, and its dequantized representation rides the
+    # rs_ag reduce-scatter/all-gather (1 byte/elem + scales on the wire per
+    # the roofline accounting). The schedule is stateless — error feedback
+    # is carried across steps by the caller, see
+    # :func:`repro.comm.compression.compressed_psum`.
+    from repro.comm.compression import dequantize, quantize
+    xf = x.astype(jnp.float32)
+    q, scale = quantize(xf)
+    sent = dequantize(q, scale, xf.shape, xf.size)
+    return _allreduce_rs_ag(engine, sent, axis).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # ring_exchange schedules
 # ---------------------------------------------------------------------------
@@ -375,6 +398,42 @@ def _transpose_staged(engine, x, axes, pg):
     r = lax.axis_index(row_ax)
     c = lax.axis_index(col_ax)
     return jnp.squeeze(lax.dynamic_slice_in_dim(g, c * pg + r, 1, 0), 0)
+
+
+@register_schedule("grid_transpose", "ring2d")
+def _transpose_ring2d(engine, x, axes, pg):
+    # dimension-ordered two-phase torus route (paper Fig. 8): the block from
+    # (r, c) reaches its transpose partner (c, r) over row links only, then
+    # column links only, relayed by the diagonal rank (r, r) — the common
+    # intermediate of every (r, *) -> (*, r) route.
+    #
+    # Phase 1 (row hops): hop-by-hop ring all-gather along the column axis,
+    # so each diagonal rank ends up holding all of its grid row. Phase 2
+    # (column hops): chain-forward the relay stack down each column from its
+    # diagonal rank; rank (r, c) finally keeps the block whose source is
+    # (c, r). Wire: (pg-1) unit-block row hops + (pg-1) stacked column hops,
+    # vs ``direct``'s single (XLA-routed) partner ppermute.
+    row_ax, col_ax = axes
+    if pg == 1:
+        return x
+    r = lax.axis_index(row_ax)
+    c = lax.axis_index(col_ax)
+    zeros = (0,) * x.ndim
+
+    stack = jnp.zeros((pg,) + x.shape, x.dtype)
+    stack = lax.dynamic_update_slice(stack, x[None], (c,) + zeros)
+    cur = x
+    for s in range(pg - 1):
+        cur = _ring_shift(cur, col_ax, +1)  # now from column (c - 1 - s)
+        stack = lax.dynamic_update_slice(stack, cur[None],
+                                         ((c - 1 - s) % pg,) + zeros)
+
+    # each column's ring runs the chain independently; src row index == c
+    out = stack
+    for _ in range(pg - 1):
+        nxt = _ring_shift(out, row_ax, +1)
+        out = jnp.where(r == c, out, nxt)
+    return jnp.squeeze(lax.dynamic_slice(out, (r,) + zeros, (1,) + x.shape), 0)
 
 
 # ---------------------------------------------------------------------------
@@ -470,6 +529,37 @@ class CollectiveEngine:
         """Sum ``x`` over all ranks of ``axis`` (a name or tuple of names)."""
         self._check_axis(axis)
         return self._resolve("allreduce", schedule)(self, x, axis)
+
+    def allreduce_tree(self, tree, axis, *,
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                       schedule: Optional[str] = None):
+        """Sum a pytree over ``axis`` in independent ~``bucket_bytes`` buckets.
+
+        Leaves are greedily packed in order (reverse-mode autodiff emits
+        gradients in backward order, so early buckets finish first); each
+        bucket's same-dtype leaves are flattened into one payload and routed
+        through the registered allreduce schedule. Independent buckets give
+        XLA the paper's Fig. 5/7 overlap structure: reduction of finished
+        buckets runs concurrently with the compute still producing later
+        leaves. Zero-size leaves pass through untouched.
+        """
+        self._check_axis(axis)
+        leaves, treedef = jax.tree.flatten(tree)
+        out = list(leaves)
+        for bucket in pack_buckets(leaves, bucket_bytes):
+            groups: Dict = {}
+            for i in bucket:
+                if leaves[i].size:
+                    groups.setdefault(jnp.dtype(leaves[i].dtype), []).append(i)
+            for idxs in groups.values():
+                flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+                red = self.allreduce(flat, axis, schedule=schedule)
+                off = 0
+                for i in idxs:
+                    n = leaves[i].size
+                    out[i] = red[off:off + n].reshape(leaves[i].shape)
+                    off += n
+        return jax.tree.unflatten(treedef, out)
 
     def ring_exchange(self, x_fwd, x_bwd, axis, *,
                       schedule: Optional[str] = None):

@@ -5,30 +5,35 @@ The paper hides HPL's communication phase behind the update phase's GEMMs
 backward compute. Under XLA the overlap happens when the reduction is split
 into independent buckets whose producers finish at different times — the
 scheduler then interleaves collective-permute/all-reduce ops with remaining
-compute. ``bucketed_psum_tree`` provides that structure.
+compute.
+
+The bucketed reduction itself is a first-class engine op,
+:meth:`repro.comm.engine.CollectiveEngine.allreduce_tree`, so every
+registered allreduce schedule (``native`` / ``chain`` / ``rs_ag`` /
+``ring2d`` / ``int8_ef``) gets the same overlap structure. This module keeps
+the pure packing helper the engine uses plus the legacy
+:func:`bucketed_psum_tree` entry point, which now routes through the engine.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import jax
-import jax.numpy as jnp
-from jax import lax
+
+DEFAULT_BUCKET_BYTES = 32 * 2**20
 
 
 def tree_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
-def bucketed_psum_tree(grads, axis: str, bucket_bytes: int = 32 * 2**20):
-    """psum a gradient pytree over ``axis`` in independent buckets.
+def pack_buckets(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                 ) -> List[List[int]]:
+    """Greedily pack leaf indices into ~``bucket_bytes`` groups, in order.
 
-    Leaves are greedily packed into ~bucket_bytes groups; each group is
-    reduced with its own psum so XLA can start reducing early buckets while
-    later gradients are still being computed (reverse-mode emits leaf grads
-    in backward order).
+    A leaf larger than ``bucket_bytes`` gets its own bucket; a bucket is
+    closed as soon as adding the next leaf would overflow it.
     """
-    leaves, treedef = jax.tree.flatten(grads)
     buckets: List[List[int]] = [[]]
     acc = 0
     for i, leaf in enumerate(leaves):
@@ -38,9 +43,18 @@ def bucketed_psum_tree(grads, axis: str, bucket_bytes: int = 32 * 2**20):
             acc = 0
         buckets[-1].append(i)
         acc += nbytes
-    out = list(leaves)
-    for bucket in buckets:
-        reduced = lax.psum(tuple(leaves[i] for i in bucket), axis)
-        for j, i in enumerate(bucket):
-            out[i] = reduced[j]
-    return jax.tree.unflatten(treedef, out)
+    return [b for b in buckets if b]
+
+
+def bucketed_psum_tree(grads, axis: str,
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """psum a gradient pytree over ``axis`` in independent buckets.
+
+    Legacy entry point: equivalent to
+    ``CollectiveEngine(schedule="native").allreduce_tree(...)``. Prefer
+    holding an engine and calling :meth:`allreduce_tree` directly, which also
+    unlocks the ring schedules.
+    """
+    from repro.comm.engine import CollectiveEngine
+    engine = CollectiveEngine(schedule="native")
+    return engine.allreduce_tree(grads, axis, bucket_bytes=bucket_bytes)

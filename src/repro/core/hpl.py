@@ -21,10 +21,18 @@ columns), so the trailing update needs no selects — a zeroed panel row
 contributes nothing, exactly like the paper's "blocks left/above need no
 further processing".
 
-Lookahead (paper Fig. 5/7 overlap) — ``lookahead=True`` splits the trailing
-update: the next iteration's panel column is updated *first*, then the
-factor+broadcast of iteration k+1 is issued before the bulk update of
-iteration k, so XLA can overlap the broadcasts with the bulk GEMM.
+Lookahead (paper Fig. 5/7 overlap) — ``lookahead=True`` pipelines the panel
+pipeline one iteration ahead: per iteration k, only the row/column strips
+that iteration k+1's panels read are updated first (two thin GEMMs), then
+iteration k+1's diagonal factorization and row/column broadcasts are issued,
+and only then is the bulk trailing GEMM of iteration k applied. The k+1
+broadcasts depend solely on the strips, so XLA can interleave the
+``chain``/``ring2d`` hops with the bulk update. The bulk GEMM still covers
+the full local matrix (the strip work is redundant compute, ~2b/m of the
+update FLOPs), which keeps the factorization bit-identical to eager mode:
+every matrix element takes its value from the same full-GEMM arithmetic,
+and the k+1 panels never read global row/column <= k (masked), the only
+entries whose values differ before the write-back.
 """
 from __future__ import annotations
 
@@ -82,31 +90,43 @@ def normalized_residual(a: np.ndarray, x: np.ndarray, b: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _iteration(k, a, *, pg: int, b: int, lb: int, engine: CollectiveEngine,
-               interpret, r, c, li_global, lj_global):
-    m = lb * b
+def _panels(k, diag, row_panel, col_panel, *, pg: int, b: int,
+            engine: CollectiveEngine, interpret, li_global, lj_global):
+    """Factor the diagonal block and form + broadcast iteration ``k``'s U/L
+    panels (paper Fig. 4 steps 1-4). ``diag``/``row_panel``/``col_panel`` are
+    this device's local strips at local block index k // pg, already carrying
+    the first k rank-b updates. Returns (lu_blk, u_panel, l_panel), all
+    broadcast grid-wide."""
     pk = k % pg
-    lk = k // pg
 
     # 1. diagonal block (speculative on every device; selected by bcast)
-    diag = lax.dynamic_slice(a, (lk * b, lk * b), (b, b))
     lu_local = lu_factor_block(diag, interpret=interpret)
     lu_blk = engine.bcast(lu_local, "cols", pk)
     lu_blk = engine.bcast(lu_blk, "rows", pk)
 
     # 2. Top panel: U_kj = L_kk^{-1} A_kj on grid row pk, cols j > k
-    row_panel = lax.dynamic_slice(a, (lk * b, 0), (b, m))
     u_panel = trsm_lower_left(lu_blk, row_panel, interpret=interpret)
     colmask = jnp.repeat(lj_global > k, b)  # (m,)
     u_panel = u_panel * colmask[None, :]
     u_panel = engine.bcast(u_panel, "rows", pk)
 
     # 3. Left panel: L_ik = A_ik U_kk^{-1} on grid col pk, rows i > k
-    col_panel = lax.dynamic_slice(a, (0, lk * b), (m, b))
     l_panel = trsm_upper_right(lu_blk, col_panel, interpret=interpret)
     rowmask = jnp.repeat(li_global > k, b)
     l_panel = l_panel * rowmask[:, None]
     l_panel = engine.bcast(l_panel, "cols", pk)
+    return lu_blk, u_panel, l_panel
+
+
+def _update_writeback(k, a, lu_blk, u_panel, l_panel, *, pg: int, b: int,
+                      lb: int, interpret, r, c, li_global, lj_global):
+    """Apply iteration ``k``'s trailing rank-b GEMM over the full local
+    matrix and write back the factored panels."""
+    m = lb * b
+    pk = k % pg
+    lk = k // pg
+    colmask = jnp.repeat(lj_global > k, b)
+    rowmask = jnp.repeat(li_global > k, b)
 
     # 4. trailing update: masks zero the factored rows/cols
     a = gemm_update(a, l_panel, u_panel, alpha=-1.0, interpret=interpret)
@@ -128,31 +148,102 @@ def _iteration(k, a, *, pg: int, b: int, lb: int, engine: CollectiveEngine,
     return a
 
 
+def _iteration(k, a, *, pg: int, b: int, lb: int, engine: CollectiveEngine,
+               interpret, r, c, li_global, lj_global):
+    """Eager iteration: factor+broadcast panels for k, then update."""
+    m = lb * b
+    lk = k // pg
+    diag = lax.dynamic_slice(a, (lk * b, lk * b), (b, b))
+    row_panel = lax.dynamic_slice(a, (lk * b, 0), (b, m))
+    col_panel = lax.dynamic_slice(a, (0, lk * b), (m, b))
+    lu_blk, u_panel, l_panel = _panels(
+        k, diag, row_panel, col_panel, pg=pg, b=b, engine=engine,
+        interpret=interpret, li_global=li_global, lj_global=lj_global)
+    return _update_writeback(k, a, lu_blk, u_panel, l_panel, pg=pg, b=b,
+                             lb=lb, interpret=interpret, r=r, c=c,
+                             li_global=li_global, lj_global=lj_global)
+
+
+def _iteration_lookahead(k, carry, *, pg: int, nb: int, b: int, lb: int,
+                         engine: CollectiveEngine, interpret, r, c,
+                         li_global, lj_global):
+    """Lookahead iteration (paper Fig. 5/7): the carry holds iteration k's
+    already-broadcast panels. Update only the strips iteration k+1 reads,
+    issue k+1's factorization + broadcasts, THEN apply the bulk trailing
+    GEMM — the broadcast hops depend only on the thin strip GEMMs, so XLA is
+    free to overlap them with the bulk update.
+
+    Bit-identity with eager mode: the bulk GEMM below still covers the full
+    local matrix, so every element of ``a`` takes its value from exactly the
+    eager arithmetic; the strip GEMMs are per-element identical to the full
+    GEMM restricted to the strip (single k-block of b <= bk columns —
+    asserted by tests/dist/test_overlap.py); and the k+1 panels never read
+    global row/column <= k (masked multiplicatively), the only entries the
+    pending write-back of iteration k would change."""
+    a, lu_blk, u_panel, l_panel = carry
+    m = lb * b
+    # iteration k+1's local panel index, clamped on the final iteration —
+    # the speculative panels computed there are discarded with the carry
+    kn = jnp.minimum(k + 1, nb - 1)
+    lkn = kn // pg
+
+    # 1. thin strip updates: just the row/column band feeding k+1's panels
+    row_strip = lax.dynamic_slice(a, (lkn * b, 0), (b, m))
+    l_rows = lax.dynamic_slice(l_panel, (lkn * b, 0), (b, b))
+    row_strip = gemm_update(row_strip, l_rows, u_panel, alpha=-1.0,
+                            interpret=interpret)
+    col_strip = lax.dynamic_slice(a, (0, lkn * b), (m, b))
+    u_cols = lax.dynamic_slice(u_panel, (0, lkn * b), (b, b))
+    col_strip = gemm_update(col_strip, l_panel, u_cols, alpha=-1.0,
+                            interpret=interpret)
+    diag = lax.dynamic_slice(col_strip, (lkn * b, 0), (b, b))
+
+    # 2. issue iteration k+1's factorization and row/column broadcasts now
+    nxt = _panels(kn, diag, row_strip, col_strip, pg=pg, b=b, engine=engine,
+                  interpret=interpret, li_global=li_global,
+                  lj_global=lj_global)
+
+    # 3. bulk trailing update + write back iteration k's factored panels
+    a = _update_writeback(k, a, lu_blk, u_panel, l_panel, pg=pg, b=b, lb=lb,
+                          interpret=interpret, r=r, c=c,
+                          li_global=li_global, lj_global=lj_global)
+    return (a,) + nxt
+
+
 def _hpl_body(a_loc, *, pg: int, nb: int, b: int, engine: CollectiveEngine,
-              interpret: bool):
+              interpret: bool, lookahead: bool = False):
     a = a_loc[0]
     lb = nb // pg
     r = lax.axis_index("rows")
     c = lax.axis_index("cols")
     li_global = jnp.arange(lb) * pg + r
     lj_global = jnp.arange(lb) * pg + c
+    common = dict(pg=pg, b=b, lb=lb, engine=engine, interpret=interpret,
+                  r=r, c=c, li_global=li_global, lj_global=lj_global)
 
-    step = partial(_iteration, pg=pg, b=b, lb=lb, engine=engine,
-                   interpret=interpret, r=r, c=c,
-                   li_global=li_global, lj_global=lj_global)
-    a = lax.fori_loop(0, nb, step, a)
+    if lookahead:
+        # prologue: iteration 0's panels from the untouched matrix
+        first = _panels(0, a[:b, :b], a[:b, :], a[:, :b], pg=pg, b=b,
+                        engine=engine, interpret=interpret,
+                        li_global=li_global, lj_global=lj_global)
+        step = partial(_iteration_lookahead, nb=nb, **common)
+        a = lax.fori_loop(0, nb, step, (a,) + first)[0]
+    else:
+        step = partial(_iteration, **common)
+        a = lax.fori_loop(0, nb, step, a)
     return a[None]
 
 
 def make_factorize(mesh, *, pg: int, nb: int, b: int,
                    comm=CommunicationType.ICI_DIRECT, schedule: str = "chain",
-                   interpret: bool = True, engine: CollectiveEngine = None):
+                   interpret: bool = True, lookahead: bool = False,
+                   engine: CollectiveEngine = None):
     engine = engine or CollectiveEngine.for_mesh(mesh, comm, schedule,
                                                  interpret=interpret)
     spec = P(("rows", "cols"), None, None)
     fn = shard_map(
         partial(_hpl_body, pg=pg, nb=nb, b=b, engine=engine,
-                interpret=interpret),
+                interpret=interpret, lookahead=lookahead),
         mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False)
     return jax.jit(fn)
 
@@ -160,8 +251,13 @@ def make_factorize(mesh, *, pg: int, nb: int, b: int,
 @register("hpl")
 def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
             b: int = 64, schedule: str = "chain", reps: int = 2,
-            interpret: bool = True, validate: bool = True) -> BenchResult:
-    """mesh axes ('rows', 'cols'), P = Q (paper's quadratic torus)."""
+            interpret: bool = True, validate: bool = True,
+            lookahead: bool = False) -> BenchResult:
+    """mesh axes ('rows', 'cols'), P = Q (paper's quadratic torus).
+
+    ``lookahead=True`` runs the overlapped factorization (paper Fig. 5/7);
+    the LU output is bit-identical to eager mode under every bcast schedule.
+    """
     pg = mesh.shape["rows"]
     assert mesh.shape["cols"] == pg, "paper requires a quadratic torus"
     nb = n // b
@@ -174,7 +270,7 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
     a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
 
     fact = make_factorize(mesh, pg=pg, nb=nb, b=b, engine=engine,
-                          interpret=interpret)
+                          interpret=interpret, lookahead=lookahead)
     out, t = timeit(fact, a_sh, reps=reps)
 
     err = 0.0
@@ -187,4 +283,5 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
         name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
         error=err, times={"best": t},
         details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
-                 "schedule": engine.schedule_for("bcast")})
+                 "schedule": engine.schedule_for("bcast"),
+                 "lookahead": lookahead})

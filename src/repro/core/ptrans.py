@@ -13,6 +13,11 @@ The exchange routes through the :class:`~repro.comm.engine.CollectiveEngine`
 * ``direct`` schedule under ICI_DIRECT — one ``ppermute`` over
   ('rows','cols') with the transpose permutation: a pure point-to-point
   circuit-switched exchange (paper §2.2.2).
+* ``ring2d`` — dimension-ordered two-phase torus route (paper Fig. 8):
+  row hops to the diagonal relay rank, then column hops to the transpose
+  partner, using only physical torus links. Select with
+  ``run_ptrans(..., schedule="ring2d")`` or ``--schedule ring2d`` /
+  ``--sweep-schedules`` in the benchmark driver.
 * ``staged`` (forced by HOST_STAGED) — all_gather over the full grid + local
   selection: every block transits the staging domain (paper §2.2.1 via
   PCIe+MPI).

@@ -30,6 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import sharding as sh
 from repro.comm import compression
 from repro.comm.engine import CollectiveEngine
+from repro.comm.overlap import DEFAULT_BUCKET_BYTES
 from repro.comm.types import CommunicationType, comm_type
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig
@@ -168,15 +169,25 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
                                 *, axis: str = "x",
                                 adamw: Optional[AdamWConfig] = None,
                                 schedule_kind: str = "native",
+                                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                                 total_steps: int = 10_000) -> Callable:
     """Pure data-parallel step with hand-written gradient reduction.
 
-    The gradient all-reduce routes through the
-    :class:`~repro.comm.engine.CollectiveEngine`: ``run_cfg.comm_type`` picks
-    ICI_DIRECT vs HOST_STAGED, ``schedule_kind`` names the registered
+    The gradient all-reduce routes through
+    :meth:`~repro.comm.engine.CollectiveEngine.allreduce_tree`, the bucketed
+    overlap path (paper Fig. 5/7's comm/compute overlap applied to the
+    backward pass): leaves are packed into ~``bucket_bytes`` buckets and each
+    bucket is reduced independently, so XLA can overlap early buckets'
+    collectives with the remaining backward compute. ``run_cfg.comm_type``
+    picks ICI_DIRECT vs HOST_STAGED, ``schedule_kind`` names the registered
     reduction schedule (``native`` / ``chain`` ring / ``rs_ag`` fused ring /
-    ``staged``); ``run_cfg.grad_compression`` turns on the int8
-    error-feedback reduction (beyond-paper).
+    ``ring2d`` / ``staged``).
+
+    ``run_cfg.grad_compression`` turns on the int8 error-feedback reduction
+    (beyond-paper): that path reduces *leaf-wise* — per-leaf error state
+    cannot be bucketed without re-blocking the quantizer — so
+    ``bucket_bytes`` does not apply, but the wire payload still rides the
+    engine's ring schedules via ``compressed_psum(engine=...)``.
     """
     adamw = adamw or AdamWConfig(lr=run_cfg.learning_rate,
                                  weight_decay=run_cfg.weight_decay,
@@ -200,15 +211,15 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
             red, errs = [], []
             for g, e in zip(flat_g, flat_e):
                 r, ne = compression.compressed_psum(
-                    g.astype(jnp.float32) / ndev, axis, e)
+                    g.astype(jnp.float32) / ndev, axis, e, engine=engine)
                 red.append(r)
                 errs.append(ne)
             grads = jax.tree.unflatten(treedef, red)
             new_error = jax.tree.unflatten(treedef, errs)
         else:
-            grads = jax.tree.map(
-                lambda g: engine.allreduce(g.astype(jnp.float32) / ndev, axis),
-                grads)
+            grads = engine.allreduce_tree(
+                jax.tree.map(lambda g: g.astype(jnp.float32) / ndev, grads),
+                axis, bucket_bytes=bucket_bytes)
             new_error = state.error
         loss = engine.allreduce(loss / ndev, axis)
 

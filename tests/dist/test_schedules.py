@@ -139,7 +139,7 @@ def test_ring_exchange_schedules_identical(ring, comm, schedule):
     np.testing.assert_array_equal(np.asarray(rr), np.roll(b, -1, 0))
 
 
-@pytest.mark.parametrize("schedule", ["direct", "staged"])
+@pytest.mark.parametrize("schedule", ["direct", "staged", "ring2d"])
 def test_grid_transpose_schedules_identical(torus, schedule):
     x = _ints((4, 8, 8), seed=7)
     eng = CollectiveEngine.for_mesh(torus, schedule=schedule)
@@ -168,9 +168,12 @@ def test_hpl_torus_schedules_converge(torus, schedule):
 
 def test_ptrans_schedules_agree(torus):
     from repro.core.ptrans import run_ptrans
-    for comm, schedule in ((CT.ICI_DIRECT, "auto"), (CT.HOST_STAGED, "auto")):
+    for comm, schedule in ((CT.ICI_DIRECT, "auto"), (CT.ICI_DIRECT, "ring2d"),
+                           (CT.HOST_STAGED, "auto")):
         res = run_ptrans(torus, comm, n=128, b=32, reps=1, schedule=schedule)
-        assert res.error < 1e-5, (comm, res.error)
+        assert res.error < 1e-5, (comm, schedule, res.error)
+        if schedule != "auto":
+            assert res.details["schedule"] == schedule
 
 
 def test_moe_exchange_dispatch_roundtrip(ring):

@@ -21,12 +21,13 @@ from jax.sharding import PartitionSpec as P
 
 def test_registry_has_core_schedules():
     assert {"chain", "native", "staged", "ring2d"} <= set(schedules_for("bcast"))
-    assert {"chain", "native", "staged", "rs_ag", "ring2d"} <= set(
+    assert {"chain", "native", "staged", "rs_ag", "ring2d", "int8_ef"} <= set(
         schedules_for("allreduce"))
     assert {"chain", "native", "staged"} <= set(
         schedules_for("all_to_all_tiles"))
     assert {"direct", "staged"} <= set(schedules_for("ring_exchange"))
-    assert {"direct", "staged"} <= set(schedules_for("grid_transpose"))
+    assert {"direct", "staged", "ring2d"} <= set(
+        schedules_for("grid_transpose"))
     assert "auto" in known_schedules()
 
 
