@@ -58,6 +58,7 @@ def _hpl_lookahead(quick: bool, schedules, record):
             perf[mode] = res.metric
             record[f"hpl/{schedule}/{mode}"] = {
                 "n": n, "gflops": res.metric, "err": res.error,
+                "schedule": res.details["schedule"],
                 "time": res.times["best"]}
         rows.append([schedule, f"{perf['eager']:.3f}",
                      f"{perf['lookahead']:.3f}",
@@ -89,16 +90,25 @@ def _bucketed_reduction(quick: bool, schedules, record):
     tree = _grad_tree(quick)
     total = tree_bytes(tree)
     nleaves = len(jax.tree.leaves(tree))
-    # monolithic = one bucket; bucketed = a few buckets; leafwise = 1 B cap
+    # monolithic = one bucket; bucketed = a few buckets; model = the
+    # topology-derived size (pipeline depth x per-hop latency-bw product);
+    # leafwise = the pathological many-small-collectives end
+    model_bytes = CollectiveEngine.for_mesh(mesh).bucket_bytes_for("x")
     bucket_modes = {"monolithic": 1 << 40, "bucketed": max(total // 4, 1),
-                    "leafwise": 1}
+                    "model": model_bytes, "leafwise": 1}
     print(f"== bucketed vs monolithic gradient reduction "
-          f"({nleaves} leaves, {fmt_bytes(total)}, ring of {ndev}) ==")
+          f"({nleaves} leaves, {fmt_bytes(total)}, ring of {ndev}, "
+          f"model bucket {fmt_bytes(model_bytes)}) ==")
     rows = []
     for schedule in schedules:
         eng = CollectiveEngine.for_mesh(mesh, schedule=schedule)
         times = {}
         for mode, bucket_bytes in bucket_modes.items():
+            # resolved name at this mode's bucket payload (allreduce_tree
+            # resolves per bucket, so the mode's effective payload — one
+            # bucket, capped by the whole tree — is what auto actually sees)
+            resolved = eng.schedule_for(
+                "allreduce", nbytes=min(bucket_bytes, total), axis="x")
             fn = jax.jit(shard_map(
                 partial(eng.allreduce_tree, axis="x",
                         bucket_bytes=bucket_bytes),
@@ -107,6 +117,7 @@ def _bucketed_reduction(quick: bool, schedules, record):
             times[mode] = t
             record[f"reduce/{schedule}/{mode}"] = {
                 "bytes": total, "leaves": nleaves, "time": t,
+                "bucket_bytes": bucket_bytes, "schedule": resolved,
                 "gbps": total / t / 1e9}
         rows.append([schedule] + [f"{times[m] * 1e3:.2f}ms"
                                   for m in bucket_modes]
@@ -120,7 +131,10 @@ def main(quick: bool = False, schedule=None):
     record = {}
     bcasts = [s for s in schedules_for("bcast") if s != "staged"]
     reduces = [s for s in schedules_for("allreduce") if s != "staged"]
-    if schedule is not None:  # sweep mode: restrict to the swept schedule;
+    if schedule == "auto":
+        # cost-model resolution per callsite — its own sweep column
+        bcasts, reduces = ["auto"], ["auto"]
+    elif schedule is not None:  # sweep mode: restrict to the swept schedule;
         # a schedule with no counterpart for an op skips that half rather
         # than duplicating another schedule's measurement in the sweep
         bcasts = [s for s in bcasts if s == schedule]

@@ -1,16 +1,25 @@
 """Benchmark driver:
 ``PYTHONPATH=src python -m benchmarks.run [--quick] [--schedule NAME]
-[--sweep-schedules] [modules...]``.
+[--sweep-schedules] [--autotune] [modules...]``.
 
 ``--schedule`` selects a registered collective-engine schedule (``chain``,
 ``native``, ``staged``, ``ring2d``, ``rs_ag``, ``int8_ef``; see
 repro.comm.engine) for every benchmark that communicates; the engine's
-resolved schedule name is recorded in each result file.
+resolved schedule name is recorded in each result file. Without the flag
+(or with ``--schedule auto``) every engine resolves per callsite through
+the cost model (repro.comm.autotune) and the driver prints the choices.
 
 ``--sweep-schedules`` instead runs each selected benchmark once per schedule
-registered for its primary collective op and emits one comparison table per
-benchmark (the paper's Figs. 10-16 with schedules as columns), saved to
+registered for its primary collective op — plus an ``auto`` row showing what
+the cost model picks — and emits one comparison table per benchmark (the
+paper's Figs. 10-16 with schedules as columns), saved to
 ``results/bench/schedule_sweep.json``.
+
+``--autotune`` microbenchmarks every registered schedule per op on the live
+devices, persists the per-size winners to ``results/tuning.json`` (loaded by
+every subsequent ``schedule="auto"`` engine), and fails if any ``auto``
+resolution names an unregistered schedule. Combine with modules to run
+benchmarks against the freshly measured table in the same invocation.
 
 Module arguments accept short aliases: ``hpl`` -> hpl_scaling, ``ptrans`` ->
 ptrans_scaling, ``beff`` -> beff_bandwidth, ``overlap`` -> overlap_bench.
@@ -90,6 +99,16 @@ def _parse_schedule(argv):
     return schedule, rest
 
 
+def _print_resolved(name, record):
+    """Surface the cost-model choices: every resolved schedule recorded in
+    the module's result dict (the literal "auto" never appears here)."""
+    picks = sorted({str(v["schedule"]) for v in (record or {}).values()
+                    if isinstance(v, dict) and "schedule" in v})
+    if picks:
+        print(f"[{name}: cost-model resolved schedule(s): "
+              f"{', '.join(picks)}]")
+
+
 def _run_module(name, quick, schedule):
     print("\n" + "=" * 78)
     print(f"### benchmarks.{name}"
@@ -98,8 +117,59 @@ def _run_module(name, quick, schedule):
     t0 = time.time()
     mod = __import__(f"benchmarks.{name}", fromlist=["main"])
     record = mod.main(quick=quick, schedule=schedule)
+    if schedule in (None, "auto"):
+        _print_resolved(name, record)
     print(f"[{name} done in {time.time() - t0:.1f}s]")
     return record
+
+
+def _autotune(quick):
+    """Measure registered schedules on the live mesh, persist the tuning
+    table, refresh the default cost model, and verify every auto resolution
+    is a registered name (CI gate)."""
+    import jax
+
+    from repro.comm.autotune import (autotune_mesh, default_cost_model,
+                                     default_table_path)
+    from repro.comm.engine import OPS, schedules_for
+    from repro.comm.topology import AxisTopology
+
+    print("\n" + "=" * 78)
+    print("### autotune: measuring registered schedules on the live mesh")
+    print("=" * 78)
+    table, record = autotune_mesh(quick=quick)
+    path = table.save(default_table_path())
+    save_result("autotune_raw", record)
+    print(f"[tuning table -> {path}]")
+    for op, sigs in table.entries.items():
+        for sig, rows in sigs.items():
+            bands = ", ".join(
+                f"<= {b}B: {n}" if b is not None else f"rest: {n}"
+                for b, n in rows)
+            print(f"  {op:16s} {sig:28s} {bands}")
+
+    model = default_cost_model(refresh=True)
+    # gate: auto must resolve to a registered schedule for every op across
+    # the measured topologies and a size ladder spanning the table bands
+    bad = []
+    probe_axes = {
+        "ring": (AxisTopology("x", len(jax.devices()), "ring"),),
+    }
+    for op in OPS:
+        for sig, axes in probe_axes.items():
+            for lg in range(0, 27, 2):
+                choice = model.choose(op, 1 << lg, axes)
+                if choice is None or choice not in schedules_for(op):
+                    bad.append((op, sig, 1 << lg, choice))
+    for op, sigs in table.entries.items():
+        for sig, rows in sigs.items():
+            for _, nm in rows:
+                if nm not in schedules_for(op):
+                    bad.append((op, sig, "table", nm))
+    if bad:
+        print("UNREGISTERED auto resolutions:", bad)
+        raise SystemExit(1)
+    print("[autotune ok: every auto resolution is a registered schedule]")
 
 
 def _metric_rows(record):
@@ -121,7 +191,9 @@ def _sweep(modules, quick):
     failures = []
     for name in modules:
         op = SWEEP_OPS.get(name)
-        schedules = list(schedules_for(op)) if op else [None]
+        # "auto" rides along as its own column: the cost-model pick should
+        # sit within noise of the best fixed schedule
+        schedules = list(schedules_for(op)) + ["auto"] if op else [None]
         per_schedule = {}
         for s in schedules:
             try:
@@ -155,12 +227,18 @@ def main():
     schedule, argv = _parse_schedule(sys.argv[1:])
     quick = "--quick" in argv
     sweep = "--sweep-schedules" in argv
+    autotune = "--autotune" in argv
     only = [ALIASES.get(a, a) for a in argv if not a.startswith("-")]
     for name in only:
         if name not in MODULES:
             raise SystemExit(f"unknown benchmark {name!r}; modules are "
                              f"{MODULES} (aliases: {ALIASES})")
     modules = only or MODULES
+
+    if autotune:
+        _autotune(quick)  # SystemExit(1) on unregistered auto resolutions
+        if not only and not sweep:
+            return  # tune-only invocation (the CI smoke step)
 
     if sweep:
         if schedule is not None:

@@ -1,0 +1,553 @@
+"""Cost-model-driven schedule autotuning for the collective engine.
+
+The paper's core finding is that the best communication path is workload- and
+topology-dependent: circuit-switched inter-FPGA routes beat the host-staged
+MPI path for the communication-bound benchmarks, but the winner flips with
+message size and node count (Figs. 4-7). This module makes that selection a
+first-class subsystem instead of a static per-op default:
+
+* **Analytic mode** — an alpha-beta model prices every registered schedule
+  per ``(op, message bytes, axis topology)``. Each schedule is reduced to
+  hop count and per-link wire bytes on the :class:`AxisTopology` it runs
+  over, and priced with :func:`repro.roofline.alpha_beta_time` using the
+  :class:`HardwareModel` link numbers (per-hop latency ``alpha``, link
+  bandwidth ``beta``; the staging domain uses MPI latency and PCIe/DCN
+  bandwidth, the paper's Eq. 2 path).
+
+* **Measured mode** — :func:`autotune_mesh` microbenchmarks the registered
+  schedules on the live mesh across a ladder of message sizes, derives
+  per-size winners, and persists a :class:`TuningTable` to
+  ``results/tuning.json`` (``benchmarks/run.py --autotune``). The table is
+  loaded on startup by :func:`default_cost_model` and overrides the analytic
+  ranking wherever it has an entry, turning the ``--sweep-schedules``
+  infrastructure into a feedback loop.
+
+``CollectiveEngine`` resolves ``schedule="auto"`` through
+:meth:`CostModel.choose` per callsite (cached by op/size/axis signature);
+:func:`derive_bucket_bytes` replaces the fixed 32 MiB ``allreduce_tree``
+bucket with pipeline depth x per-hop latency-bandwidth product.
+
+Model (single ring axis of n ranks, message of S bytes; ``sync`` is the XLA
+collective dispatch/rendezvous overhead in hop units):
+
+====================  =====================================================
+op / schedule         hops x alpha                +  wire bytes / beta
+====================  =====================================================
+bcast/chain           (n-1)                          (n-1) S
+bcast/native          sync + n/2                     (n-1) S / 2
+bcast/ring2d          2(n-1)                         2 S (n-1)/n
+allreduce/chain       (n-1)                          (n-1) S
+allreduce/native      sync + (n-1)                   (n-1)/n S
+allreduce/rs_ag       2(n-1)                         2 S (n-1)/n
+allreduce/ring2d      sum over torus dims of the per-dim rs_ag ring
+allreduce/int8_ef     rs_ag hops                     rs_ag wire x ~0.27
+a2a/native            sync + n/2                     (n-1)/n S / 2
+a2a/chain             n(n-1)/2                       (n-1) S / 2
+ring_exchange/direct  1                              S
+transpose/direct      pg                             S
+transpose/ring2d      2(pg-1)                        (pg-1)(1+pg) S
+* /staged             2 (MPI latency)                (ranks+1) S (PCIe/DCN)
+====================  =====================================================
+
+``native`` rides both ring directions (XLA uses all torus links) but pays a
+fixed dispatch/rendezvous overhead; the explicit ``chain`` pipeline has no
+such overhead, so it wins the latency-bound small-message regime — exactly
+the paper's CSN-vs-MPI flip. Lossy schedules (``int8_ef``) are priced but
+never *chosen* by ``auto``: compression changes numerics and must stay an
+explicit opt-in.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.comm.topology import AxisTopology
+from repro.comm.types import TPU_V5E, HardwareModel
+from repro.roofline import alpha_beta_time
+
+# XLA-native collectives pay a fixed dispatch/rendezvous cost that the
+# hand-written ppermute pipelines do not; expressed in per-hop latency units
+# so it scales with the hardware model.
+NATIVE_SYNC_HOPS = 6.0
+
+# int8_ef wire ratio vs its f32 payload: 1 byte/elem + 4/BLOCK scale bytes
+# (repro.comm.compression, BLOCK=256) => (0.25 + 1/256) of the f32 bytes.
+INT8_WIRE_RATIO = 0.25 + 1.0 / 256.0
+
+# schedules auto must never select: they change numerics (explicit opt-in)
+LOSSY_SCHEDULES = frozenset({"int8_ef"})
+
+# allreduce_tree pipelining: how many buckets should be in flight so bucket
+# k+1's backward compute hides bucket k's ring hops (paper Fig. 5/7 depth)
+PIPELINE_DEPTH = 4
+MIN_BUCKET_BYTES = 1 << 18   # 256 KiB — below this, per-collective overhead
+MAX_BUCKET_BYTES = 32 << 20  # the former fixed default, now the ceiling
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_TABLE_PATH = _REPO_ROOT / "results" / "tuning.json"
+
+
+def default_table_path() -> Path:
+    """``results/tuning.json``, overridable via ``REPRO_TUNING_TABLE``."""
+    return Path(os.environ.get("REPRO_TUNING_TABLE", DEFAULT_TABLE_PATH))
+
+
+def axis_signature(axes: Sequence[AxisTopology]) -> str:
+    """Canonical topology key, e.g. ``ring[8]`` or
+    ``torus_row[2]+torus_col[2]`` — what tuning-table entries are keyed by."""
+    return "+".join(f"{a.kind}[{a.size}]" for a in axes)
+
+
+def _ranks(axes: Sequence[AxisTopology]) -> int:
+    n = 1
+    for a in axes:
+        n *= a.size
+    return n
+
+
+# ---------------------------------------------------------------------------
+# per-(op, schedule) analytic costs
+# ---------------------------------------------------------------------------
+
+
+def _sync(hw: HardwareModel) -> float:
+    return NATIVE_SYNC_HOPS * hw.ici_latency
+
+
+def _staged_cost(nbytes: float, axes, hw: HardwareModel) -> float:
+    # every byte transits the staging domain: up to the host network once,
+    # back fanned out to all ranks (paper Eq. 2's PCIe+MPI route)
+    n = _ranks(axes)
+    return alpha_beta_time(2, (n + 1) * nbytes, hw, staged=True)
+
+
+def _ring_rs_ag(nbytes: float, n: int, hw: HardwareModel) -> float:
+    if n <= 1:
+        return 0.0
+    return alpha_beta_time(2 * (n - 1), 2 * (n - 1) / n * nbytes, hw)
+
+
+def _cost_bcast_chain(S, axes, hw):
+    n = _ranks(axes)
+    return alpha_beta_time(n - 1, (n - 1) * S, hw)
+
+
+def _cost_bcast_native(S, axes, hw):
+    # bidirectional all-gather + select: half the hops, both link directions
+    n = _ranks(axes)
+    return _sync(hw) + alpha_beta_time(math.ceil(n / 2), (n - 1) * S / 2, hw)
+
+
+def _cost_bcast_ring2d(S, axes, hw):
+    # scatter + ring all-gather: 2(n-1) hops of S/n chunks
+    n = _ranks(axes)
+    return _ring_rs_ag(S, n, hw)
+
+
+def _cost_allreduce_chain(S, axes, hw):
+    n = _ranks(axes)
+    return alpha_beta_time(n - 1, (n - 1) * S, hw)
+
+
+def _cost_allreduce_native(S, axes, hw):
+    # XLA ring reduce-scatter/all-gather over both directions
+    n = _ranks(axes)
+    return _sync(hw) + alpha_beta_time(n - 1, (n - 1) / n * S, hw)
+
+
+def _cost_allreduce_rs_ag(S, axes, hw):
+    return _ring_rs_ag(S, _ranks(axes), hw)
+
+
+def _cost_allreduce_ring2d(S, axes, hw):
+    # one unidirectional ring pass per torus dimension
+    return sum(_ring_rs_ag(S, a.size, hw) for a in axes)
+
+
+def _cost_allreduce_int8_ef(S, axes, hw):
+    return _ring_rs_ag(S * INT8_WIRE_RATIO, _ranks(axes), hw)
+
+
+def _cost_a2a_native(S, axes, hw):
+    n = _ranks(axes)
+    return _sync(hw) + alpha_beta_time(math.ceil(n / 2),
+                                       (n - 1) / n * S / 2, hw)
+
+
+def _cost_a2a_chain(S, axes, hw):
+    # tile at ring distance d travels d hops: sum d = n(n-1)/2 hops of S/n
+    n = _ranks(axes)
+    return alpha_beta_time(n * (n - 1) / 2, (n - 1) / 2 * S, hw)
+
+
+def _cost_exchange_direct(S, axes, hw):
+    return alpha_beta_time(1, S, hw)
+
+
+def _pg(axes) -> int:
+    # grid_transpose runs on a pg x pg torus; a single flattened axis entry
+    # (or explicit pair) both reduce to sqrt(total ranks)
+    return max(int(round(math.sqrt(_ranks(axes)))), 1)
+
+
+def _cost_transpose_direct(S, axes, hw):
+    # dimension-ordered route to the (r,c)<->(c,r) partner: <= pg links
+    pg = _pg(axes)
+    if pg <= 1:
+        return 0.0  # no exchange on a 1x1 grid
+    return alpha_beta_time(pg, S, hw)
+
+
+def _cost_transpose_ring2d(S, axes, hw):
+    # row-phase ring all-gather (pg-1 unit-block hops) + column-phase chain
+    # of the pg-block relay stack (paper Fig. 8 two-phase route)
+    pg = _pg(axes)
+    if pg <= 1:
+        return 0.0
+    return (alpha_beta_time(pg - 1, (pg - 1) * S, hw)
+            + alpha_beta_time(pg - 1, (pg - 1) * pg * S, hw))
+
+
+_COSTS: Dict[Tuple[str, str], Callable] = {
+    ("bcast", "chain"): _cost_bcast_chain,
+    ("bcast", "native"): _cost_bcast_native,
+    ("bcast", "ring2d"): _cost_bcast_ring2d,
+    ("bcast", "staged"): _staged_cost,
+    ("allreduce", "chain"): _cost_allreduce_chain,
+    ("allreduce", "native"): _cost_allreduce_native,
+    ("allreduce", "rs_ag"): _cost_allreduce_rs_ag,
+    ("allreduce", "ring2d"): _cost_allreduce_ring2d,
+    ("allreduce", "int8_ef"): _cost_allreduce_int8_ef,
+    ("allreduce", "staged"): _staged_cost,
+    ("all_to_all_tiles", "native"): _cost_a2a_native,
+    ("all_to_all_tiles", "chain"): _cost_a2a_chain,
+    ("all_to_all_tiles", "staged"): _staged_cost,
+    ("ring_exchange", "direct"): _cost_exchange_direct,
+    ("ring_exchange", "chain"): _cost_exchange_direct,
+    ("ring_exchange", "staged"): _staged_cost,
+    ("grid_transpose", "direct"): _cost_transpose_direct,
+    ("grid_transpose", "chain"): _cost_transpose_direct,
+    ("grid_transpose", "ring2d"): _cost_transpose_ring2d,
+    ("grid_transpose", "staged"): _staged_cost,
+}
+
+
+# ---------------------------------------------------------------------------
+# tuning table (measured mode)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TuningTable:
+    """Measured per-(op, topology) winners, bucketed by message size.
+
+    ``entries[op][axis_sig]`` is an ascending list of ``[max_bytes, name]``
+    pairs; a ``None`` max_bytes entry is the open-ended tail. Lookup returns
+    the first entry whose bound covers ``nbytes``.
+    """
+    hw: str = TPU_V5E.name
+    entries: Dict[str, Dict[str, List[Tuple[Optional[int], str]]]] = \
+        field(default_factory=dict)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def lookup(self, op: str, sig: str, nbytes: int) -> Optional[str]:
+        for bound, name in self.entries.get(op, {}).get(sig, ()):
+            if bound is None or nbytes <= bound:
+                return name
+        return None
+
+    def set(self, op: str, sig: str,
+            bounds: List[Tuple[Optional[int], str]]) -> None:
+        self.entries.setdefault(op, {})[sig] = list(bounds)
+
+    def to_json(self) -> Dict:
+        return {"hw": self.hw, "meta": self.meta,
+                "entries": {op: {sig: [[b, n] for b, n in rows]
+                                 for sig, rows in sigs.items()}
+                            for op, sigs in self.entries.items()}}
+
+    @classmethod
+    def from_json(cls, data: Dict) -> "TuningTable":
+        entries = {
+            op: {sig: [(None if b is None else int(b), str(n))
+                       for b, n in rows]
+                 for sig, rows in sigs.items()}
+            for op, sigs in data.get("entries", {}).items()}
+        return cls(hw=data.get("hw", TPU_V5E.name), entries=entries,
+                   meta=data.get("meta", {}))
+
+    def save(self, path=None) -> Path:
+        path = Path(path or default_table_path())
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, path=None) -> Optional["TuningTable"]:
+        path = Path(path or default_table_path())
+        try:
+            with open(path) as f:
+                return cls.from_json(json.load(f))
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+
+# ---------------------------------------------------------------------------
+# the cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(eq=False)
+class CostModel:
+    """Prices registered schedules and picks one per (op, bytes, topology).
+
+    A measured :class:`TuningTable` (when present) overrides the analytic
+    alpha-beta ranking for the (op, axis signature) pairs it covers; the
+    analytic model covers everything else, so ``auto`` always resolves.
+    Choices are memoized by ``(op, nbytes, axis signature)`` — resolution is
+    a pure function of static data, hence identical across processes.
+    """
+    hw: HardwareModel = TPU_V5E
+    table: Optional[TuningTable] = None
+    _cache: Dict[Tuple[str, int, str], str] = field(default_factory=dict,
+                                                    repr=False)
+
+    def cost(self, op: str, schedule: str, nbytes: float,
+             axes: Sequence[AxisTopology]) -> float:
+        """Predicted seconds; ``inf`` for schedules the model cannot price
+        (e.g. user-registered ones with no formula — never chosen by auto)."""
+        fn = _COSTS.get((op, schedule))
+        if fn is None:
+            return float("inf")
+        if any(a.kind == "staging" for a in axes):
+            return _staged_cost(nbytes, axes, self.hw)
+        return fn(float(nbytes), tuple(axes), self.hw)
+
+    def rank(self, op: str, nbytes: float, axes: Sequence[AxisTopology], *,
+             include_lossy: bool = False) -> List[Tuple[str, float]]:
+        """Registered schedules for ``op`` sorted by predicted cost. Ties
+        break toward the op's static default, then by name, so the ranking
+        is deterministic (aliases like ``chain``-for-``direct`` price
+        identically). Lossy schedules are excluded unless requested — auto
+        must never change numerics."""
+        from repro.comm.engine import _AUTO, schedules_for
+        default = _AUTO.get(op)
+        rows = []
+        for name in schedules_for(op):
+            if name in LOSSY_SCHEDULES and not include_lossy:
+                continue
+            c = self.cost(op, name, nbytes, axes)
+            if math.isfinite(c):
+                rows.append((name, c))
+        return sorted(rows, key=lambda r: (r[1], r[0] != default, r[0]))
+
+    def choose(self, op: str, nbytes: int,
+               axes: Sequence[AxisTopology]) -> Optional[str]:
+        """The schedule ``auto`` resolves to, or None if nothing is priced."""
+        sig = axis_signature(axes)
+        key = (op, int(nbytes), sig)
+        if key in self._cache:
+            return self._cache[key]
+        name = None
+        if self.table is not None:
+            name = self.table.lookup(op, sig, int(nbytes))
+            if name is not None:
+                from repro.comm.engine import schedules_for
+                if name not in schedules_for(op) or name in LOSSY_SCHEDULES:
+                    name = None  # stale table entry: fall back to analytic
+        if name is None:
+            ranked = self.rank(op, nbytes, axes)
+            name = ranked[0][0] if ranked else None
+        self._cache[key] = name
+        return name
+
+
+_DEFAULT_MODEL: Optional[CostModel] = None
+
+
+def _table_matches_runtime(table: Optional[TuningTable]) -> bool:
+    """A measured table only applies to the backend it was measured on —
+    a tuning.json produced on the simulated CPU mesh (e.g. the CI artifact)
+    must not override the analytic model on real TPU."""
+    if table is None:
+        return False
+    recorded = table.meta.get("backend")
+    if recorded is None:
+        return True  # hand-written table: caller's responsibility
+    import jax
+    return recorded == jax.default_backend()
+
+
+def default_cost_model(refresh: bool = False) -> CostModel:
+    """Process-wide model the engine uses for ``schedule="auto"``: analytic
+    alpha-beta on :data:`TPU_V5E`, overlaid with ``results/tuning.json``
+    when a measured table exists *for this backend*. ``refresh=True``
+    re-reads the table (after ``benchmarks/run.py --autotune``)."""
+    global _DEFAULT_MODEL
+    if _DEFAULT_MODEL is None or refresh:
+        table = TuningTable.load()
+        if not _table_matches_runtime(table):
+            table = None
+        _DEFAULT_MODEL = CostModel(hw=TPU_V5E, table=table)
+    return _DEFAULT_MODEL
+
+
+# ---------------------------------------------------------------------------
+# derived bucket size for allreduce_tree
+# ---------------------------------------------------------------------------
+
+
+def derive_bucket_bytes(axes: Sequence[AxisTopology],
+                        hw: HardwareModel = TPU_V5E, *,
+                        depth: int = PIPELINE_DEPTH) -> int:
+    """Bucket size for the bucketed tree reduction, from topology + link
+    numbers instead of a fixed constant.
+
+    A bucket's ring reduction occupies ``2(n-1)`` hops; with ``depth``
+    buckets in flight the per-bucket payload should cover that hop latency
+    at link bandwidth — ``depth x 2(n-1) x (alpha x beta)`` (the per-hop
+    latency-bandwidth product). Rounded up to a power of two and clamped to
+    [:data:`MIN_BUCKET_BYTES`, :data:`MAX_BUCKET_BYTES`] (the former fixed
+    default is now the ceiling)."""
+    n = _ranks(axes)
+    if n <= 1:
+        return MIN_BUCKET_BYTES
+    raw = depth * 2 * (n - 1) * hw.ici_latency * hw.ici_link_bw
+    raw = max(raw, MIN_BUCKET_BYTES)
+    return int(min(1 << math.ceil(math.log2(raw)), MAX_BUCKET_BYTES))
+
+
+# ---------------------------------------------------------------------------
+# measured mode: microbenchmark the registered schedules on the live mesh
+# ---------------------------------------------------------------------------
+
+
+def _winner_bounds(sizes: Sequence[int],
+                   winners: Sequence[str]) -> List[Tuple[Optional[int], str]]:
+    """Collapse per-size winners into [max_bytes, name] bands; boundaries
+    sit at the geometric mean of adjacent measured sizes."""
+    bounds: List[Tuple[Optional[int], str]] = []
+    for i, name in enumerate(winners):
+        last = i == len(winners) - 1
+        if bounds and bounds[-1][1] == name:
+            bounds.pop()  # extend the previous band
+        edge = None if last else int(math.sqrt(sizes[i] * sizes[i + 1]))
+        bounds.append((edge, name))
+    if bounds and bounds[-1][0] is not None:
+        bounds[-1] = (None, bounds[-1][1])
+    return bounds
+
+
+def _measure_op(mesh, op: str, nbytes: int, schedule: str,
+                reps: int) -> float:
+    """Best-of-reps seconds for one (op, schedule, size) on the live mesh."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm.engine import CollectiveEngine
+    from repro.compat import shard_map
+    from repro.core.hpcc import timeit
+
+    engine = CollectiveEngine.for_mesh(mesh, schedule=schedule)
+    names = tuple(mesh.shape)
+    nranks = int(np.prod([mesh.shape[a] for a in names]))
+    elems = max(nbytes // 4, 1)
+
+    if op == "grid_transpose":
+        pg = mesh.shape[names[0]]
+        side = max(int(math.sqrt(elems)), 1)
+        x = jnp.asarray(np.ones((nranks, side, side), np.float32))
+        spec = P(tuple(names), None, None)
+        body = (lambda v: engine.grid_transpose(v[0], tuple(names), pg)[None])
+    elif op == "ring_exchange":
+        x = jnp.asarray(np.ones((nranks, elems), np.float32))
+        spec = P(names[0], None)
+        body = (lambda v: engine.ring_exchange(v[0], v[0], names[0])[0][None])
+    elif op == "bcast":
+        x = jnp.asarray(np.ones((nranks, elems), np.float32))
+        spec = P(names[0], None)
+        body = (lambda v: engine.bcast(v[0], names[0], 0)[None])
+    elif op == "allreduce":
+        ax = tuple(names) if len(names) > 1 else names[0]
+        x = jnp.asarray(np.ones((nranks, elems), np.float32))
+        spec = P(tuple(names) if len(names) > 1 else names[0], None)
+        body = (lambda v: engine.allreduce(v[0], ax)[None])
+    else:  # all_to_all_tiles
+        x = jnp.asarray(np.ones((nranks, nranks * max(elems // nranks, 1)),
+                                np.float32))
+        spec = P(names[0], None)
+        body = (lambda v: engine.all_to_all_tiles(
+            v[0], names[0], split_axis=0, concat_axis=0)[None])
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                           check_vma=False))
+    _, t = timeit(fn, x, reps=reps, warmup=1)
+    return t
+
+
+def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
+                                           "ring_exchange", "grid_transpose"),
+                  sizes: Optional[Sequence[int]] = None, reps: int = 3,
+                  quick: bool = False, verbose: bool = True
+                  ) -> Tuple[TuningTable, Dict]:
+    """Measure every registered exact schedule per op on the live devices and
+    build a :class:`TuningTable` of per-size winners.
+
+    Ring ops run over a ring of all devices; ``grid_transpose`` over the
+    largest square torus. Returns ``(table, record)`` where ``record`` holds
+    the raw per-(op, schedule, size) timings for the bench artifact."""
+    import jax
+
+    from repro.comm.engine import schedules_for
+    from repro.comm.topology import MeshTopology
+    from repro.compat import make_mesh
+
+    if sizes is None:
+        sizes = ((1 << 10, 1 << 16) if quick
+                 else (1 << 10, 1 << 14, 1 << 18, 1 << 22))
+    reps = 2 if quick else reps
+
+    ndev = len(jax.devices())
+    ring = make_mesh((ndev,), ("x",))
+    pg = int(math.isqrt(ndev))
+    torus = make_mesh((pg, pg), ("rows", "cols")) if pg >= 2 else None
+
+    table = TuningTable(meta={"devices": ndev, "sizes": list(sizes),
+                              "backend": jax.default_backend()})
+    record: Dict[str, Dict] = {}
+    for op in ops:
+        mesh = torus if op == "grid_transpose" else ring
+        if mesh is None:
+            continue
+        topo = MeshTopology.from_mesh(mesh)
+        sig = axis_signature([topo.axis(a) for a in topo.names()])
+        names = [s for s in schedules_for(op) if s not in LOSSY_SCHEDULES]
+        winners, measured_sizes = [], []
+        for S in sizes:
+            times = {}
+            for name in names:
+                try:
+                    times[name] = _measure_op(mesh, op, S, name, reps)
+                except Exception as e:  # noqa: BLE001 — skip broken combos
+                    if verbose:
+                        print(f"  [autotune] {op}/{name}@{S}B failed: {e}")
+            if not times:
+                continue  # winners stay aligned with measured_sizes
+            best = min(sorted(times), key=times.get)
+            winners.append(best)
+            measured_sizes.append(S)
+            record[f"{op}/{sig}/{S}"] = {"winner": best, "times_s": times}
+            if verbose:
+                ladder = " ".join(f"{n}={times[n]*1e3:.2f}ms"
+                                  for n in sorted(times))
+                print(f"  [autotune] {op:16s} {S:>9d}B -> {best:8s} ({ladder})")
+        if winners:
+            table.set(op, sig, _winner_bounds(measured_sizes, winners))
+    return table, record

@@ -66,7 +66,8 @@ def compressed_psum(x: jnp.ndarray, axis: str, error: jnp.ndarray, *,
     if engine is None:
         reduced = lax.psum(sent, axis)
     else:
-        inner = schedule or engine.schedule_for("allreduce")
+        inner = schedule or engine.schedule_for(
+            "allreduce", nbytes=sent.size * sent.dtype.itemsize, axis=axis)
         if inner == "int8_ef":
             inner = "rs_ag"
         reduced = engine.allreduce(sent, axis, schedule=inner)

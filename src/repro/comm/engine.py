@@ -7,7 +7,10 @@ that: a *schedule registry* — every collective op has named implementations
 ("schedules") registered against it, and a :class:`CollectiveEngine` selects
 one per op from ``(CommunicationType, schedule name)`` plus per-axis topology
 metadata (:class:`repro.comm.topology.MeshTopology`). Callers hold an engine
-and never branch on comm/schedule themselves.
+and never branch on comm/schedule themselves. ``schedule="auto"`` resolves
+per callsite through the :mod:`repro.comm.autotune` cost model from the
+payload size and axis topology (measured tuning table first, analytic
+alpha-beta ranking otherwise).
 
 Ops
 ---
@@ -74,7 +77,9 @@ OPS: Tuple[str, ...] = ("bcast", "all_to_all_tiles", "allreduce",
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {op: {} for op in OPS}
 
-# schedule used per op when the engine is constructed with schedule="auto"
+# static per-op fallbacks for schedule="auto" — used only when the cost
+# model has nothing to go on (no topology, no payload size, unknown axis);
+# with both available, auto resolves through repro.comm.autotune per callsite
 _AUTO = {
     "bcast": "chain",
     "all_to_all_tiles": "native",
@@ -82,6 +87,14 @@ _AUTO = {
     "ring_exchange": "direct",
     "grid_transpose": "direct",
 }
+
+
+def _payload_bytes(x) -> Optional[int]:
+    """Static byte size of an array/tracer (shapes are static under jit)."""
+    try:
+        return int(x.size) * jnp.dtype(x.dtype).itemsize
+    except (TypeError, AttributeError):
+        return None
 
 
 class UnknownScheduleError(ValueError):
@@ -337,17 +350,58 @@ def _allreduce_ring2d(engine, x, axis):
 
 @register_schedule("allreduce", "int8_ef")
 def _allreduce_int8_ef(engine, x, axis):
-    # int8 block-quantized wire format over the bandwidth-optimal ring: the
-    # payload is quantized once, and its dequantized representation rides the
-    # rs_ag reduce-scatter/all-gather (1 byte/elem + scales on the wire per
-    # the roofline accounting). The schedule is stateless — error feedback
-    # is carried across steps by the caller, see
+    # int8 block-quantized wire format over the bandwidth-optimal ring, with
+    # the quantization applied *per ring chunk, per hop*: every ppermute
+    # moves an int8 payload plus fp32 per-block scales (1 byte/elem +
+    # 4/BLOCK bytes/elem on every hop), never a whole-bucket fp32 buffer.
+    # Reduce-scatter hops quantize the outgoing partial-sum chunk right
+    # before the shift and dequantize after; the all-gather half quantizes
+    # each owner's reduced chunk once and forwards the int8 payload
+    # unchanged around the ring. Accumulation stays in fp32 via the fused
+    # Pallas step. Lossy in general (partial sums are requantized); exact
+    # whenever every hop's chunk is exactly representable by the block
+    # quantizer — see tests/dist/test_overlap.py. The schedule is stateless:
+    # error feedback across steps is carried by the caller, see
     # :func:`repro.comm.compression.compressed_psum`.
     from repro.comm.compression import dequantize, quantize
-    xf = x.astype(jnp.float32)
-    q, scale = quantize(xf)
-    sent = dequantize(q, scale, xf.shape, xf.size)
-    return _allreduce_rs_ag(engine, sent, axis).astype(x.dtype)
+    if isinstance(axis, (tuple, list)):
+        for ax in axis:
+            x = _allreduce_int8_ef(engine, x, ax)
+        return x
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    stack = _pack_chunks(x.astype(jnp.float32), n)
+
+    def _shift_q(chunk):
+        # one ring hop with the quantized wire format
+        q, scale = quantize(chunk)
+        q = _ring_shift(q, axis, +1)
+        scale = _ring_shift(scale, axis, +1)
+        return q, scale
+
+    # reduce-scatter: same chunk walk as rs_ag, int8 payload per hop
+    for s in range(n - 1):
+        send = _chunk(stack, (idx - s) % n)
+        q, scale = _shift_q(send)
+        recv = dequantize(q, scale, send.shape, send.size)
+        local = _chunk(stack, (idx - 1 - s) % n)
+        stack = _set_chunk(stack, (idx - 1 - s) % n,
+                           _fused_add(engine, local, recv))
+
+    # all-gather: quantize the owned chunk once; every rank (owner included)
+    # keeps the dequantized wire value so all ranks agree bitwise
+    own = _chunk(stack, (idx + 1) % n)
+    q, scale = quantize(own)
+    stack = _set_chunk(stack, (idx + 1) % n,
+                       dequantize(q, scale, own.shape, own.size))
+    for s in range(n - 1):
+        q = _ring_shift(q, axis, +1)
+        scale = _ring_shift(scale, axis, +1)
+        stack = _set_chunk(stack, (idx - s) % n,
+                           dequantize(q, scale, own.shape, own.size))
+    return stack.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -448,21 +502,30 @@ class CollectiveEngine:
     ``comm``      the paper's Fig. 1 backend selector. ``HOST_STAGED`` forces
                   the ``staged`` schedule for every op (all bytes through the
                   staging domain), matching the paper's PCIe+MPI bitstreams.
-    ``schedule``  a registered schedule name, or ``"auto"`` for the per-op
+    ``schedule``  a registered schedule name, or ``"auto"`` to resolve per
+                  callsite through the cost model (:mod:`repro.comm.autotune`)
+                  from the payload size and the axis topology — analytic
+                  alpha-beta ranking overlaid with the measured tuning table
+                  when ``results/tuning.json`` exists. Without topology or
+                  payload information auto falls back to static per-op
                   defaults. A name registered for *some* ops only (e.g.
-                  ``chain`` has no dedicated ring_exchange variant) falls
-                  back to the op's auto default — so ``--schedule chain``
+                  ``chain`` has no dedicated ring_exchange variant) resolves
+                  like auto for the uncovered ops — so ``--schedule chain``
                   applies suite-wide without per-op plumbing.
-    ``topology``  optional :class:`MeshTopology` for axis validation and
-                  result provenance (``describe()``).
+    ``topology``  optional :class:`MeshTopology` for axis validation, cost-
+                  model resolution, and result provenance (``describe()``).
     ``interpret`` Pallas interpret flag for fused steps; None (default)
                   resolves to compiled on TPU, interpret elsewhere — the
                   same rule as :mod:`repro.kernels.ops`.
+    ``cost_model`` optional explicit :class:`repro.comm.autotune.CostModel`;
+                  None uses the process-wide default (analytic + persisted
+                  tuning table).
     """
     comm: CommunicationType = CommunicationType.ICI_DIRECT
     schedule: str = "auto"
     topology: Optional[MeshTopology] = None
     interpret: Optional[bool] = None
+    cost_model: Optional[object] = None
 
     def __post_init__(self):
         object.__setattr__(self, "comm", comm_type(self.comm))
@@ -479,8 +542,14 @@ class CollectiveEngine:
 
     # -- schedule resolution ------------------------------------------------
 
-    def schedule_for(self, op: str, override: Optional[str] = None) -> str:
-        """The schedule name this engine runs ``op`` with."""
+    def schedule_for(self, op: str, override: Optional[str] = None, *,
+                     nbytes: Optional[int] = None, axis=None) -> str:
+        """The schedule name this engine runs ``op`` with.
+
+        With ``nbytes`` (message payload) and ``axis`` (a topology axis name
+        or tuple), ``auto`` resolves through the cost model; without them it
+        falls back to the static per-op default, so provenance queries keep
+        working outside any callsite."""
         if op not in OPS:
             raise ValueError(f"unknown collective op {op!r}; ops are {OPS}")
         if override is not None and override != "auto" \
@@ -494,14 +563,34 @@ class CollectiveEngine:
         if self.comm is CommunicationType.HOST_STAGED:
             return "staged"
         name = override or self.schedule
-        if name == "auto":
-            return _AUTO[op]
-        if name in _REGISTRY[op]:
+        if name != "auto" and name in _REGISTRY[op]:
             return name
-        return _AUTO[op]  # engine-wide name that doesn't cover this op
+        # "auto", or an engine-wide name that doesn't cover this op
+        return self._auto_choice(op, nbytes, axis)
 
-    def _resolve(self, op: str, override: Optional[str]) -> Callable:
-        return _REGISTRY[op][self.schedule_for(op, override)]
+    def _auto_choice(self, op: str, nbytes: Optional[int], axis) -> str:
+        """Cost-model resolution; static default when the model has nothing
+        to price (no topology / payload / unknown axis)."""
+        if nbytes is None or axis is None or self.topology is None:
+            return _AUTO[op]
+        try:
+            names = axis if isinstance(axis, (tuple, list)) else (axis,)
+            axes = tuple(self.topology.axis(a) for a in names)
+        except KeyError:
+            return _AUTO[op]
+        model = self.cost_model
+        if model is None:
+            from repro.comm.autotune import default_cost_model
+            model = default_cost_model()
+        choice = model.choose(op, int(nbytes), axes)
+        if choice is not None and choice in _REGISTRY[op]:
+            return choice
+        return _AUTO[op]
+
+    def _resolve(self, op: str, override: Optional[str], *,
+                 nbytes: Optional[int] = None, axis=None) -> Callable:
+        return _REGISTRY[op][self.schedule_for(op, override, nbytes=nbytes,
+                                               axis=axis)]
 
     def _check_axis(self, axis):
         if self.topology is None:
@@ -515,23 +604,47 @@ class CollectiveEngine:
         """Broadcast ``val`` from rank ``src`` (traced scalar ok) along
         ``axis``."""
         self._check_axis(axis)
-        return self._resolve("bcast", schedule)(self, val, axis, src)
+        fn = self._resolve("bcast", schedule, nbytes=_payload_bytes(val),
+                           axis=axis)
+        return fn(self, val, axis, src)
 
     def all_to_all_tiles(self, x, axis, *, split_axis: int, concat_axis: int,
                          schedule: Optional[str] = None):
         """Exchange tiles so rank i's j-th split lands on rank j, ordered by
         source rank on ``concat_axis``."""
         self._check_axis(axis)
-        return self._resolve("all_to_all_tiles", schedule)(
-            self, x, axis, split_axis=split_axis, concat_axis=concat_axis)
+        fn = self._resolve("all_to_all_tiles", schedule,
+                           nbytes=_payload_bytes(x), axis=axis)
+        return fn(self, x, axis, split_axis=split_axis,
+                  concat_axis=concat_axis)
 
     def allreduce(self, x, axis, *, schedule: Optional[str] = None):
         """Sum ``x`` over all ranks of ``axis`` (a name or tuple of names)."""
         self._check_axis(axis)
-        return self._resolve("allreduce", schedule)(self, x, axis)
+        fn = self._resolve("allreduce", schedule, nbytes=_payload_bytes(x),
+                           axis=axis)
+        return fn(self, x, axis)
+
+    def bucket_bytes_for(self, axis) -> int:
+        """Model-derived bucket size for :meth:`allreduce_tree` over
+        ``axis``: pipeline depth x ring hops x per-hop latency-bandwidth
+        product (:func:`repro.comm.autotune.derive_bucket_bytes`), replacing
+        the former fixed 32 MiB constant. Falls back to that constant when
+        the engine has no topology for ``axis``."""
+        if self.topology is None:
+            return DEFAULT_BUCKET_BYTES
+        try:
+            names = axis if isinstance(axis, (tuple, list)) else (axis,)
+            axes = tuple(self.topology.axis(a) for a in names)
+        except KeyError:
+            return DEFAULT_BUCKET_BYTES
+        from repro.comm.autotune import default_cost_model, derive_bucket_bytes
+        model = self.cost_model
+        hw = getattr(model, "hw", None) or default_cost_model().hw
+        return derive_bucket_bytes(axes, hw)
 
     def allreduce_tree(self, tree, axis, *,
-                       bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                       bucket_bytes: Optional[int] = None,
                        schedule: Optional[str] = None):
         """Sum a pytree over ``axis`` in independent ~``bucket_bytes`` buckets.
 
@@ -542,8 +655,13 @@ class CollectiveEngine:
         XLA the paper's Fig. 5/7 overlap structure: reduction of finished
         buckets runs concurrently with the compute still producing later
         leaves. Zero-size leaves pass through untouched.
+
+        ``bucket_bytes=None`` (default) derives the size from the topology
+        and hardware model via :meth:`bucket_bytes_for`.
         """
         self._check_axis(axis)
+        if bucket_bytes is None:
+            bucket_bytes = self.bucket_bytes_for(axis)
         leaves, treedef = jax.tree.flatten(tree)
         out = list(leaves)
         for bucket in pack_buckets(leaves, bucket_bytes):
@@ -566,15 +684,18 @@ class CollectiveEngine:
         """Bidirectional neighbor exchange (b_eff pattern). Returns
         (recv_from_left, recv_from_right)."""
         self._check_axis(axis)
-        return self._resolve("ring_exchange", schedule)(
-            self, x_fwd, x_bwd, axis)
+        fn = self._resolve("ring_exchange", schedule,
+                           nbytes=_payload_bytes(x_fwd), axis=axis)
+        return fn(self, x_fwd, x_bwd, axis)
 
     def grid_transpose(self, x, axes, pg: int, *,
                        schedule: Optional[str] = None):
         """Exchange with the (r,c)<->(c,r) partner on a ``pg`` x ``pg``
         torus flattened over ``axes`` (PTRANS §2.2.2)."""
         self._check_axis(axes)
-        return self._resolve("grid_transpose", schedule)(self, x, axes, pg)
+        fn = self._resolve("grid_transpose", schedule,
+                           nbytes=_payload_bytes(x), axis=axes)
+        return fn(self, x, axes, pg)
 
     # -- provenance ---------------------------------------------------------
 
@@ -583,8 +704,15 @@ class CollectiveEngine:
         d = {
             "comm": self.comm.value,
             "schedule": self.schedule,
+            # static (payload-free) resolution; callsites with a payload may
+            # refine these through the cost model — benchmarks record the
+            # per-callsite resolved name in their own results
             "resolved": {op: self.schedule_for(op) for op in OPS},
         }
+        if self.schedule == "auto" \
+                and self.comm is not CommunicationType.HOST_STAGED:
+            d["auto_resolver"] = ("cost_model" if self.topology is not None
+                                  else "static")
         if self.topology is not None:
             d["topology"] = self.topology.describe()
         return d

@@ -10,16 +10,21 @@ compute.
 The bucketed reduction itself is a first-class engine op,
 :meth:`repro.comm.engine.CollectiveEngine.allreduce_tree`, so every
 registered allreduce schedule (``native`` / ``chain`` / ``rs_ag`` /
-``ring2d`` / ``int8_ef``) gets the same overlap structure. This module keeps
-the pure packing helper the engine uses plus the legacy
-:func:`bucketed_psum_tree` entry point, which now routes through the engine.
+``ring2d`` / ``int8_ef``) gets the same overlap structure, and the bucket
+size is derived from the topology by default
+(:func:`repro.comm.autotune.derive_bucket_bytes`). This module keeps the
+pure packing helper the engine uses; :func:`bucketed_psum_tree` is a
+**deprecated** shim kept one release for out-of-tree callers.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List
 
 import jax
 
+# ceiling for derived bucket sizes (repro.comm.autotune) and the fallback
+# when an engine has no topology to derive from
 DEFAULT_BUCKET_BYTES = 32 * 2**20
 
 
@@ -48,13 +53,19 @@ def pack_buckets(leaves, bucket_bytes: int = DEFAULT_BUCKET_BYTES
 
 def bucketed_psum_tree(grads, axis: str,
                        bucket_bytes: int = DEFAULT_BUCKET_BYTES):
-    """psum a gradient pytree over ``axis`` in independent buckets.
+    """Deprecated: call
+    :meth:`repro.comm.engine.CollectiveEngine.allreduce_tree` instead.
 
-    Legacy entry point: equivalent to
-    ``CollectiveEngine(schedule="native").allreduce_tree(...)``. Prefer
-    holding an engine and calling :meth:`allreduce_tree` directly, which also
-    unlocks the ring schedules.
+    There is a single code path for bucketed reductions — the engine op —
+    which also unlocks the ring schedules, the cost-model ``auto``
+    resolution, and the topology-derived bucket size. This shim (the old
+    hard-wired-psum entry point) forwards to it and will be removed.
     """
+    warnings.warn(
+        "bucketed_psum_tree is deprecated; use "
+        "CollectiveEngine.allreduce_tree(tree, axis, bucket_bytes=...) — "
+        "the single engine code path for bucketed reductions",
+        DeprecationWarning, stacklevel=2)
     from repro.comm.engine import CollectiveEngine
     engine = CollectiveEngine(schedule="native")
     return engine.allreduce_tree(grads, axis, bucket_bytes=bucket_bytes)

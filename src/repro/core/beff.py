@@ -78,10 +78,15 @@ def run_beff(mesh, comm=CommunicationType.ICI_DIRECT, *, max_log: int = 20,
         ok = bool(jnp.all(ofwd == fill) & jnp.all(obwd == fill))
         error += 0.0 if ok else 1.0
     beff = models.effective_bandwidth(bw)
+    # resolved provenance at the largest message (the bandwidth-defining
+    # regime), never the literal "auto"
+    resolved = engine.schedule_for("ring_exchange", nbytes=2 ** max_log,
+                                   axis="x")
     return BenchResult(
         name="b_eff", metric_name="effective_bandwidth_B/s", metric=beff,
         error=error, times=times,
         details={"bandwidth_by_size": bw, "devices": n,
                  "comm": engine.comm.value,
-                 "schedule": engine.schedule_for("ring_exchange"),
+                 "schedule": resolved,
+                 "schedule_requested": engine.schedule,
                  "rounds": rounds})

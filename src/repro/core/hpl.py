@@ -279,9 +279,15 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
         x = solve_from_lu(lu, b_vec)
         err = normalized_residual(a, x, b_vec)
 
+    # resolved provenance: the *name the cost model picked* for the dominant
+    # payload (the b x m row/column panels), never the literal "auto"
+    panel_bytes = b * (nb // pg) * b * 4
+    resolved = engine.schedule_for("bcast", nbytes=panel_bytes, axis="rows")
     return BenchResult(
         name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
         error=err, times={"best": t},
         details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
-                 "schedule": engine.schedule_for("bcast"),
+                 "schedule": resolved,
+                 "schedule_requested": engine.schedule,
+                 "bcast_bytes": panel_bytes,
                  "lookahead": lookahead})

@@ -123,9 +123,16 @@ def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
         err = float(np.max(np.abs(c - ref)))
 
     flops = float(n) * n  # paper: n^2 additions
+    # resolved provenance: the cost model's pick for the actual per-device
+    # exchange payload (the packed local matrix), never the literal "auto"
+    local_bytes = (n // pg) * (n // pg) * 4
+    resolved = engine.schedule_for("grid_transpose", nbytes=local_bytes,
+                                   axis=("rows", "cols"))
     return BenchResult(
         name="ptrans", metric_name="GFLOP/s", metric=flops / t / 1e9,
         error=err, times={"best": t},
         details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
-                 "schedule": engine.schedule_for("grid_transpose"),
+                 "schedule": resolved,
+                 "schedule_requested": engine.schedule,
+                 "exchange_bytes": local_bytes,
                  "bytes_exchanged": float(n) * n * 4})

@@ -450,6 +450,22 @@ def collective_bytes(hlo_text: str) -> HloStats:
 # ---------------------------------------------------------------------------
 
 
+def alpha_beta_time(hops: float, wire_bytes: float,
+                    hw: HardwareModel = TPU_V5E, *,
+                    staged: bool = False) -> float:
+    """Link-level alpha-beta term: ``hops x per-hop latency + bytes / bw``.
+
+    The ``collective_s`` roofline term above prices wire bytes only; schedule
+    *selection* (repro.comm.autotune) also needs the latency side, because
+    small-message collectives are hop-count-bound. ``staged=True`` prices the
+    host-staged domain (MPI small-message latency, PCIe/DCN bandwidth — the
+    paper's Eq. 2 path) instead of the circuit-switched links.
+    """
+    if staged:
+        return hops * hw.mpi_latency + wire_bytes / min(hw.pcie_bw, hw.dcn_bw)
+    return hops * hw.ici_latency + wire_bytes / hw.ici_link_bw
+
+
 @dataclass
 class Roofline:
     flops: float                 # per-device HLO flops (parsed, loop-expanded)

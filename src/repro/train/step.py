@@ -30,7 +30,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import sharding as sh
 from repro.comm import compression
 from repro.comm.engine import CollectiveEngine
-from repro.comm.overlap import DEFAULT_BUCKET_BYTES
 from repro.comm.types import CommunicationType, comm_type
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig
@@ -168,8 +167,8 @@ def shard_state(state: TrainState, mesh: Mesh, *, zero1: bool = True,
 def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
                                 *, axis: str = "x",
                                 adamw: Optional[AdamWConfig] = None,
-                                schedule_kind: str = "native",
-                                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                                schedule_kind: str = "auto",
+                                bucket_bytes: Optional[int] = None,
                                 total_steps: int = 10_000) -> Callable:
     """Pure data-parallel step with hand-written gradient reduction.
 
@@ -181,7 +180,11 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
     collectives with the remaining backward compute. ``run_cfg.comm_type``
     picks ICI_DIRECT vs HOST_STAGED, ``schedule_kind`` names the registered
     reduction schedule (``native`` / ``chain`` ring / ``rs_ag`` fused ring /
-    ``ring2d`` / ``staged``).
+    ``ring2d`` / ``staged``) — the default ``"auto"`` resolves per bucket
+    through the cost model (:mod:`repro.comm.autotune`).
+    ``bucket_bytes=None`` derives the bucket size from the DP-axis topology
+    and hardware link numbers (pipeline depth x per-hop latency-bandwidth
+    product) instead of a fixed constant.
 
     ``run_cfg.grad_compression`` turns on the int8 error-feedback reduction
     (beyond-paper): that path reduces *leaf-wise* — per-leaf error state

@@ -1,0 +1,352 @@
+"""Cost-model schedule-autotuning tests (single device).
+
+The model must be a *pure function of static data* — the same (op, bytes,
+topology) resolves to the same schedule in every process — and its rankings
+must pin the paper's qualitative regimes: store-and-forward chains win the
+latency-bound small-message end, ring schedules win the bandwidth-bound
+large-message end, and the winner flips in between (paper Figs. 4-7).
+
+Multi-device *output equivalence* of auto vs fixed schedules runs in
+tests/dist/test_autotune.py on the simulated 8-device mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.comm.autotune import (LOSSY_SCHEDULES, MAX_BUCKET_BYTES,
+                                 MIN_BUCKET_BYTES, CostModel, TuningTable,
+                                 axis_signature, derive_bucket_bytes)
+from repro.comm.engine import CollectiveEngine, schedules_for
+from repro.comm.topology import AxisTopology, MeshTopology
+from repro.comm.types import TPU_V5E
+
+RING8 = (AxisTopology("x", 8, "ring"),)
+RING4 = (AxisTopology("x", 4, "ring"),)
+RING2 = (AxisTopology("x", 2, "ring"),)
+TORUS22 = (AxisTopology("rows", 2, "torus_row"),
+           AxisTopology("cols", 2, "torus_col"))
+
+KiB = 1 << 10
+MiB = 1 << 20
+
+
+def analytic():
+    """A table-free model: the persisted tuning.json must not leak into the
+    ranking pins below."""
+    return CostModel(hw=TPU_V5E, table=None)
+
+
+# ---------------------------------------------------------------------------
+# analytic-model structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op,schedule", [
+    ("bcast", "chain"), ("bcast", "native"), ("bcast", "ring2d"),
+    ("allreduce", "chain"), ("allreduce", "native"), ("allreduce", "rs_ag"),
+    ("allreduce", "ring2d"), ("allreduce", "staged"),
+    ("grid_transpose", "direct"), ("grid_transpose", "ring2d"),
+    ("ring_exchange", "direct"),
+])
+def test_cost_monotone_in_message_size(op, schedule):
+    m = analytic()
+    axes = TORUS22 if op == "grid_transpose" else RING8
+    costs = [m.cost(op, schedule, s, axes)
+             for s in (KiB, 64 * KiB, MiB, 64 * MiB)]
+    assert all(a < b for a, b in zip(costs, costs[1:])), (op, schedule, costs)
+
+
+@pytest.mark.parametrize("op,schedule", [
+    ("bcast", "chain"), ("bcast", "native"), ("bcast", "ring2d"),
+    ("allreduce", "chain"), ("allreduce", "native"), ("allreduce", "rs_ag"),
+])
+def test_cost_monotone_in_hop_count(op, schedule):
+    m = analytic()
+    for size in (KiB, MiB):
+        c2 = m.cost(op, schedule, size, RING2)
+        c4 = m.cost(op, schedule, size, RING4)
+        c8 = m.cost(op, schedule, size, RING8)
+        assert c2 < c4 < c8, (op, schedule, size, (c2, c4, c8))
+
+
+def test_unpriced_schedule_is_infinite_and_never_chosen():
+    m = analytic()
+    assert m.cost("allreduce", "no_such_schedule", MiB, RING8) == float("inf")
+    names = [n for n, _ in m.rank("allreduce", MiB, RING8)]
+    assert "no_such_schedule" not in names
+
+
+# ---------------------------------------------------------------------------
+# regime pins (acceptance: >= 3 (op, size, topology) regimes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op,size,axes,winner", [
+    # latency-bound: the store-and-forward chain beats native's dispatch
+    # overhead (the paper's CSN-beats-MPI small-message regime)
+    ("allreduce", KiB, RING8, "chain"),
+    ("bcast", KiB, RING8, "chain"),
+    # bandwidth-bound allreduce: XLA's bidirectional ring wins
+    ("allreduce", 64 * MiB, RING8, "native"),
+    # bandwidth-bound bcast: the two-phase scatter/all-gather ring halves
+    # the wire vs native's garbage-gather, and chain's (n-1)x full payload
+    ("bcast", 64 * MiB, RING8, "ring2d"),
+    # transpose: the point-to-point partner exchange always beats the
+    # stacked two-phase relay (paper Fig. 8's route costs (pg-1)(1+pg) S)
+    ("grid_transpose", MiB, TORUS22, "direct"),
+])
+def test_regime_pins(op, size, axes, winner):
+    m = analytic()
+    ranked = m.rank(op, size, axes)
+    assert ranked[0][0] == winner, (op, size, ranked)
+    assert m.choose(op, size, axes) == winner
+
+
+def test_regime_flips_with_message_size():
+    """The winner must actually flip across the ladder (paper Figs. 4-7)."""
+    m = analytic()
+    small = m.choose("allreduce", KiB, RING8)
+    large = m.choose("allreduce", 64 * MiB, RING8)
+    assert small != large
+
+
+def test_auto_never_selects_lossy():
+    m = analytic()
+    for size in (KiB, 64 * KiB, MiB, 64 * MiB):
+        names = [n for n, _ in m.rank("allreduce", size, RING8)]
+        assert not (set(names) & LOSSY_SCHEDULES)
+        assert m.choose("allreduce", size, RING8) not in LOSSY_SCHEDULES
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+_PROBE = [("bcast", lg) for lg in range(0, 27, 3)] + \
+         [("allreduce", lg) for lg in range(0, 27, 3)] + \
+         [("ring_exchange", lg) for lg in (4, 16, 24)]
+
+_PROBE_SRC = """
+import json
+from repro.comm.autotune import default_cost_model
+from repro.comm.topology import AxisTopology
+ring = (AxisTopology("x", 8, "ring"),)
+m = default_cost_model()
+probe = {probe!r}
+print(json.dumps({{f"{{op}}:{{lg}}": m.choose(op, 1 << lg, ring)
+                   for op, lg in probe}}))
+"""
+
+
+def _probe_choices():
+    from repro.comm.autotune import default_cost_model
+    m = default_cost_model(refresh=True)
+    return {f"{op}:{lg}": m.choose(op, 1 << lg, RING8) for op, lg in _PROBE}
+
+
+def test_auto_resolution_deterministic_across_processes():
+    """auto must resolve identically in every process (SPMD ranks compile
+    the same program): compare this process's choices against a fresh
+    interpreter's."""
+    here = _probe_choices()
+    env = dict(os.environ)
+    src_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src_dir, env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROBE_SRC.format(probe=_PROBE)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    there = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert here == there
+
+
+def test_choose_is_cached_and_stable():
+    m = analytic()
+    first = m.choose("allreduce", MiB, RING8)
+    assert m.choose("allreduce", MiB, RING8) == first
+    assert analytic().choose("allreduce", MiB, RING8) == first
+
+
+# ---------------------------------------------------------------------------
+# tuning table round-trip
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_table():
+    t = TuningTable(meta={"devices": 8})
+    sig = axis_signature(RING8)
+    t.set("allreduce", sig, [(64 * KiB, "rs_ag"), (None, "ring2d")])
+    t.set("bcast", sig, [(None, "native")])
+    return t
+
+
+def test_tuning_table_roundtrip(tmp_path):
+    table = _synthetic_table()
+    path = table.save(tmp_path / "tuning.json")
+    loaded = TuningTable.load(path)
+    assert loaded is not None
+    assert loaded.to_json() == table.to_json()
+
+    before = CostModel(table=table)
+    after = CostModel(table=loaded)
+    for size in (KiB, 64 * KiB, 65 * KiB, 64 * MiB):
+        want = before.choose("allreduce", size, RING8)
+        assert after.choose("allreduce", size, RING8) == want
+    # the measured table overrides the analytic ranking where it has entries
+    assert after.choose("allreduce", KiB, RING8) == "rs_ag"
+    assert after.choose("allreduce", 64 * MiB, RING8) == "ring2d"
+    assert after.choose("bcast", 64 * MiB, RING8) == "native"
+
+
+def test_tuning_table_band_boundaries():
+    t = _synthetic_table()
+    sig = axis_signature(RING8)
+    assert t.lookup("allreduce", sig, 64 * KiB) == "rs_ag"      # inclusive
+    assert t.lookup("allreduce", sig, 64 * KiB + 1) == "ring2d"
+    assert t.lookup("allreduce", "ring[4]", KiB) is None        # unknown sig
+    assert t.lookup("grid_transpose", sig, KiB) is None         # unknown op
+
+
+def test_stale_table_entry_falls_back_to_analytic():
+    t = TuningTable()
+    t.set("allreduce", axis_signature(RING8), [(None, "deleted_schedule")])
+    m = CostModel(table=t)
+    choice = m.choose("allreduce", 64 * MiB, RING8)
+    assert choice in schedules_for("allreduce")
+    assert choice == analytic().choose("allreduce", 64 * MiB, RING8)
+
+
+def test_load_missing_table_returns_none(tmp_path):
+    assert TuningTable.load(tmp_path / "nope.json") is None
+
+
+def test_default_model_rejects_foreign_backend_table(tmp_path, monkeypatch):
+    """A table measured on another backend (e.g. the CI CPU artifact landing
+    on a TPU checkout) must not override the analytic model."""
+    from repro.comm.autotune import default_cost_model
+    import jax
+    try:
+        t = _synthetic_table()
+        t.meta["backend"] = "definitely_not_" + jax.default_backend()
+        monkeypatch.setenv("REPRO_TUNING_TABLE",
+                           str(t.save(tmp_path / "foreign.json")))
+        assert default_cost_model(refresh=True).table is None
+
+        t.meta["backend"] = jax.default_backend()
+        t.save(tmp_path / "foreign.json")
+        assert default_cost_model(refresh=True).table is not None
+    finally:
+        monkeypatch.delenv("REPRO_TUNING_TABLE")
+        default_cost_model(refresh=True)  # restore process-wide state
+
+
+def test_winner_bounds_stay_aligned_with_measured_sizes():
+    """Winners pair with the sizes that were actually measured: a failed
+    intermediate ladder size must not shift the band boundaries."""
+    from repro.comm.autotune import _winner_bounds
+    # ladder (1K, 16K, 256K, 4M) with 16K failed -> measured (1K, 256K, 4M)
+    bounds = _winner_bounds([1 << 10, 1 << 18, 1 << 22],
+                            ["chain", "native", "ring2d"])
+    assert bounds == [(int((2 ** 14)), "chain"),
+                      (int((2 ** 20)), "native"),
+                      (None, "ring2d")]
+    # consecutive same winners merge into one band
+    assert _winner_bounds([1, 4, 16], ["a", "a", "b"]) == [(8, "a"),
+                                                           (None, "b")]
+    assert _winner_bounds([1, 4], ["a", "a"]) == [(None, "a")]
+
+
+# ---------------------------------------------------------------------------
+# derived bucket size
+# ---------------------------------------------------------------------------
+
+
+def test_derive_bucket_bytes_bounds_and_monotonicity():
+    b1 = derive_bucket_bytes((AxisTopology("x", 1, "ring"),))
+    b2 = derive_bucket_bytes(RING2)
+    b8 = derive_bucket_bytes(RING8)
+    for b in (b1, b2, b8):
+        assert MIN_BUCKET_BYTES <= b <= MAX_BUCKET_BYTES
+        assert b & (b - 1) == 0, f"{b} is not a power of two"
+    assert b2 <= b8  # more hops -> bigger buckets to amortize latency
+
+
+def test_derive_bucket_bytes_latency_bandwidth_product():
+    # depth x 2(n-1) hops x (alpha x beta), rounded up to a power of two:
+    # 4 x 14 x (1e-6 s x 50e9 B/s) = 2.8 MB -> 4 MiB on the v5e numbers
+    assert derive_bucket_bytes(RING8, TPU_V5E) == 4 * MiB
+
+
+# ---------------------------------------------------------------------------
+# engine integration (no devices needed: resolution is host-side)
+# ---------------------------------------------------------------------------
+
+
+def _engine8(**kw):
+    topo = MeshTopology(axes=RING8)
+    return CollectiveEngine(schedule="auto", topology=topo,
+                            cost_model=analytic(), **kw)
+
+
+def test_engine_auto_resolves_through_cost_model():
+    eng = _engine8()
+    assert eng.schedule_for("allreduce", nbytes=KiB, axis="x") == "chain"
+    assert eng.schedule_for("allreduce", nbytes=64 * MiB, axis="x") == "native"
+    assert eng.schedule_for("bcast", nbytes=64 * MiB, axis="x") == "ring2d"
+    # the literal "auto" never escapes resolution
+    for op in ("bcast", "allreduce", "ring_exchange"):
+        for size in (KiB, MiB, 64 * MiB):
+            name = eng.schedule_for(op, nbytes=size, axis="x")
+            assert name != "auto" and name in schedules_for(op)
+
+
+def test_engine_auto_without_payload_uses_static_defaults():
+    eng = _engine8()
+    assert eng.schedule_for("bcast") == "chain"
+    assert eng.schedule_for("allreduce") == "native"
+    assert eng.schedule_for("allreduce", nbytes=KiB, axis=None) == "native"
+
+
+def test_engine_auto_unknown_axis_falls_back():
+    eng = _engine8()
+    assert eng.schedule_for("allreduce", nbytes=KiB, axis="bogus") == "native"
+
+
+def test_engine_partial_name_falls_back_through_model():
+    # rs_ag covers allreduce only: other ops resolve like auto, through the
+    # model when payload context exists
+    topo = MeshTopology(axes=RING8)
+    eng = CollectiveEngine(schedule="rs_ag", topology=topo,
+                           cost_model=analytic())
+    assert eng.schedule_for("allreduce", nbytes=64 * MiB, axis="x") == "rs_ag"
+    assert eng.schedule_for("bcast", nbytes=64 * MiB, axis="x") == "ring2d"
+    assert eng.schedule_for("bcast", nbytes=KiB, axis="x") == "chain"
+
+
+def test_engine_bucket_bytes_for():
+    eng = _engine8()
+    assert eng.bucket_bytes_for("x") == derive_bucket_bytes(RING8, TPU_V5E)
+    from repro.comm.overlap import DEFAULT_BUCKET_BYTES
+    assert CollectiveEngine().bucket_bytes_for("x") == DEFAULT_BUCKET_BYTES
+    assert eng.bucket_bytes_for("bogus") == DEFAULT_BUCKET_BYTES
+
+
+def test_engine_explicit_override_beats_model():
+    eng = _engine8()
+    assert eng.schedule_for("allreduce", "chain",
+                            nbytes=64 * MiB, axis="x") == "chain"
+
+
+def test_host_staged_still_forces_staged():
+    from repro.comm.types import CommunicationType as CT
+    topo = MeshTopology(axes=RING8)
+    eng = CollectiveEngine(comm=CT.HOST_STAGED, schedule="auto",
+                           topology=topo, cost_model=analytic())
+    assert eng.schedule_for("allreduce", nbytes=64 * MiB, axis="x") == "staged"

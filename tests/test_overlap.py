@@ -72,13 +72,28 @@ def test_allreduce_tree_validates_axis():
 def test_bucketed_psum_tree_single_device():
     mesh = make_mesh((1,), ("x",))
     tree = {"a": jnp.ones((5,), jnp.float32), "b": jnp.ones((2, 2))}
-    fn = jax.jit(shard_map(lambda t: bucketed_psum_tree(t, "x", 8),
-                           mesh=mesh, in_specs=(P(),), out_specs=P(),
-                           check_vma=False))
-    out = fn(tree)
+    with pytest.warns(DeprecationWarning, match="allreduce_tree"):
+        fn = jax.jit(shard_map(lambda t: bucketed_psum_tree(t, "x", 8),
+                               mesh=mesh, in_specs=(P(),), out_specs=P(),
+                               check_vma=False))
+        out = fn(tree)
     for k in tree:
         np.testing.assert_array_equal(np.asarray(out[k]),
                                       np.asarray(tree[k]))
+
+
+def test_bucketed_psum_tree_is_deprecated_shim():
+    """Single code path: the legacy wrapper must warn and forward to the
+    engine op rather than carry its own reduction."""
+    mesh = make_mesh((1,), ("x",))
+    tree = {"a": jnp.ones((3,), jnp.float32)}
+    with pytest.warns(DeprecationWarning):
+        fn = jax.jit(shard_map(lambda t: bucketed_psum_tree(t, "x"),
+                               mesh=mesh, in_specs=(P(),), out_specs=P(),
+                               check_vma=False))
+        out = fn(tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
 
 
 def test_hpl_lookahead_single_cell_mesh():
