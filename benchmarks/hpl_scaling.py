@@ -15,11 +15,22 @@ from repro.core.models import hpl_strong_scaling_model  # noqa: E402
 from repro.launch.mesh import make_torus_mesh  # noqa: E402
 
 
-def main(quick: bool = False, schedule=None):
+def main(quick: bool = False, schedule=None, pipeline=None):
     n_dev = len(jax.devices())
     grids = [g for g in (1, 2) if g * g <= n_dev]
     n_base = 256 if quick else 512
     b = 64
+    # pipeline = lookahead depth for the overlapped runs (run.py
+    # --sweep-schedules S column); None keeps depth 1, "auto" resolves from
+    # the cost model. The depth only affects the multi-device ICI lookahead
+    # rows, so a pipeline sweep pass skips every configuration that would
+    # re-measure byte-identical data (single device, host-staged, the
+    # extrapolation curve).
+    depth = 1 if pipeline is None else \
+        ("auto" if pipeline == "auto" else int(pipeline))
+    pipeline_only = pipeline is not None
+    if pipeline_only:
+        grids = [g for g in grids if g > 1]
 
     print("== HPL scaling (paper Figs. 14/15) ==")
     record = {}
@@ -28,7 +39,8 @@ def main(quick: bool = False, schedule=None):
     # HOST_STAGED forces the `staged` schedule regardless of the flag, so an
     # explicit other schedule (e.g. a --sweep-schedules pass) would re-run
     # byte-identical host-staged configs — skip them in that case
-    comms = ((CT.ICI_DIRECT,) if schedule not in (None, "auto", "staged")
+    comms = ((CT.ICI_DIRECT,)
+             if pipeline_only or schedule not in (None, "auto", "staged")
              else (CT.ICI_DIRECT, CT.HOST_STAGED))
     for label, strong in (("strong", True), ("weak", False)):
         for ct in comms:
@@ -46,13 +58,14 @@ def main(quick: bool = False, schedule=None):
                         res = run_hpl_single(n=n, b=b, reps=1)
                     else:
                         res = run_hpl(make_torus_mesh(g), ct, n=n, b=b,
-                                      schedule=schedule or "native", reps=1,
-                                      lookahead=lookahead,
+                                      schedule=schedule or "auto", reps=1,
+                                      lookahead=depth if lookahead else False,
                                       validate=not lookahead)
                     key = (label, ct.value)
                     if key not in base:
                         base[key] = res.metric
-                    mode = "lookahead" if lookahead else "eager"
+                    d = res.details.get("lookahead_depth", 0)
+                    mode = f"lookahead(d={d})" if lookahead else "eager"
                     # lookahead runs skip validation (LU is bit-identical
                     # to the validated eager run) — report that, not 0.0
                     resid = "= eager" if lookahead else f"{res.error:.2e}"
@@ -63,24 +76,29 @@ def main(quick: bool = False, schedule=None):
                     record[f"{label}/{ct.value}/g{g}{suffix}"] = {
                         "n": n, "gflops": res.metric,
                         "err": None if lookahead else res.error,
-                        "lookahead": lookahead,
-                        "schedule": res.details.get("schedule", "local")}
+                        "lookahead": bool(lookahead),
+                        "lookahead_depth": d,
+                        "schedule": res.details.get("schedule", "local"),
+                        "schedule_block": res.details.get("schedule_block"),
+                        "schedule_panel": res.details.get("schedule_panel")}
     print(table(rows, ["scaling", "backend", "grid", "n", "mode", "GFLOP/s",
                        "speedup", "resid"]))
 
     # Fig. 15 extrapolation: single-device perf-vs-size curve -> predicted
-    # aggregate strong-scaling performance on larger tori
-    print("\n-- strong-scaling extrapolation from the single-device curve "
-          "(paper Fig. 15 model) --")
-    sizes = [128, 256] if quick else [128, 256, 384, 512]
-    curve = {}
-    for n in sizes:
-        res = run_hpl_single(n=n, b=b, reps=1, validate=False)
-        curve[n] = res.metric
-    model = hpl_strong_scaling_model(curve, n_base, [1, 4, 9, 16, 25])
-    rows = [[d, f"{p:.3f}"] for d, p in model.items()]
-    print(table(rows, ["devices", "predicted aggregate GFLOP/s"]))
-    record["extrapolation"] = model
+    # aggregate strong-scaling performance on larger tori (pipeline-
+    # invariant, so skipped on pipeline sweep passes)
+    if not pipeline_only:
+        print("\n-- strong-scaling extrapolation from the single-device "
+              "curve (paper Fig. 15 model) --")
+        sizes = [128, 256] if quick else [128, 256, 384, 512]
+        curve = {}
+        for n in sizes:
+            res = run_hpl_single(n=n, b=b, reps=1, validate=False)
+            curve[n] = res.metric
+        model = hpl_strong_scaling_model(curve, n_base, [1, 4, 9, 16, 25])
+        rows = [[d, f"{p:.3f}"] for d, p in model.items()]
+        print(table(rows, ["devices", "predicted aggregate GFLOP/s"]))
+        record["extrapolation"] = model
     save_result("hpl_scaling", record)
     return record
 

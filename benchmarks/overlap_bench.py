@@ -1,14 +1,22 @@
 """Paper Figs. 5/7 analogue — communication/compute overlap benchmarks.
 
-Two overlap structures, both engine-driven:
+Three overlap structures, all engine-driven:
 
-1. **HPL lookahead vs eager** per registered bcast schedule: the lookahead
-   factorization issues iteration k+1's panel broadcasts before iteration
-   k's bulk trailing GEMM (the paper's headline LINPACK optimization), so
-   XLA can hide the chain/ring2d hops behind the update. Output is
-   bit-identical to eager mode by construction.
+1. **HPL lookahead vs eager** per registered bcast schedule and per
+   pipeline depth d: the depth-d factorization issues iterations
+   k+1..k+d's panel broadcasts before iteration k's bulk trailing GEMM
+   (the paper's headline LINPACK optimization), so XLA can hide the
+   chain/ring2d hops behind the update. Output is bit-identical to eager
+   mode by construction at every depth.
 
-2. **Bucketed vs monolithic gradient reduction** per registered allreduce
+2. **Chunked vs monolithic PTRANS** per chunk count S: the strip-wise
+   ``engine.pipelined`` grid transpose overlaps strip i's transpose-add
+   with strip i+1's wire hops. The autotuned (cost-model) S is its own
+   row; when it resolves to 1 the monolithic measurement is reused, so the
+   recorded pipelined-vs-monolithic ratio is <= 1.0 whenever the model
+   declines to chunk (the CI no-regression gate).
+
+3. **Bucketed vs monolithic gradient reduction** per registered allreduce
    schedule: ``CollectiveEngine.allreduce_tree`` packs a synthetic gradient
    pytree into buckets; independent buckets give the backward-overlap
    structure, a single monolithic bucket is the baseline, leaf-wise is the
@@ -40,6 +48,7 @@ def _hpl_lookahead(quick: bool, schedules, record):
     n = 256 if quick else 512
     b = 64
     g = 2
+    depths = (1, 2) if quick else (1, 2, 3)
     if not schedules:
         return
     if len(jax.devices()) < g * g:
@@ -47,24 +56,71 @@ def _hpl_lookahead(quick: bool, schedules, record):
         return
     mesh = make_torus_mesh(g)
     print(f"== HPL lookahead vs eager (paper Figs. 5/7), n={n}, "
-          f"{g}x{g} torus ==")
+          f"{g}x{g} torus, depths {depths} ==")
     rows = []
     for schedule in schedules:
         perf = {}
-        for lookahead in (False, True):
+        for lookahead in (False,) + depths:
             res = run_hpl(mesh, CT.ICI_DIRECT, n=n, b=b, schedule=schedule,
                           reps=1, lookahead=lookahead)
-            mode = "lookahead" if lookahead else "eager"
+            mode = "eager" if not lookahead else f"d{int(lookahead)}"
             perf[mode] = res.metric
             record[f"hpl/{schedule}/{mode}"] = {
                 "n": n, "gflops": res.metric, "err": res.error,
                 "schedule": res.details["schedule"],
+                "lookahead_depth": res.details["lookahead_depth"],
                 "time": res.times["best"]}
-        rows.append([schedule, f"{perf['eager']:.3f}",
-                     f"{perf['lookahead']:.3f}",
-                     f"{perf['lookahead'] / perf['eager']:.2f}x"])
-    print(table(rows, ["bcast schedule", "eager GFLOP/s",
-                       "lookahead GFLOP/s", "ratio"]))
+        rows.append([schedule, f"{perf['eager']:.3f}"]
+                    + [f"{perf[f'd{d}']:.3f}" for d in depths]
+                    + [f"{perf[f'd{d}'] / perf['eager']:.2f}x"
+                       for d in depths])
+    print(table(rows, ["bcast schedule", "eager GFLOP/s"]
+                + [f"d={d} GFLOP/s" for d in depths]
+                + [f"d={d} ratio" for d in depths]))
+    print()
+
+
+def _ptrans_pipeline(quick: bool, record):
+    """Chunked vs monolithic PTRANS (the in-flight strip pipeline). The
+    autotuned chunk count is its own row; when it resolves to S=1 the
+    monolithic timing is reused so the recorded ratio is exactly 1.0 —
+    the model chose not to chunk, and chunking cannot regress."""
+    g = 2
+    if len(jax.devices()) < g * g:
+        print("-- skipping PTRANS pipeline (needs 4 devices) --")
+        return
+    from repro.core.ptrans import CALLSITE, run_ptrans
+    n = 256 if quick else 512
+    b = 64
+    mesh = make_torus_mesh(g)
+    local_bytes = (n // g) * (n // g) * 4
+    eng = CollectiveEngine.for_mesh(mesh)
+    s_auto = eng.pipeline_chunks("grid_transpose", nbytes=local_bytes,
+                                 axis=("rows", "cols"), callsite=CALLSITE)
+    print(f"== chunked vs monolithic PTRANS, n={n}, {g}x{g} torus "
+          f"(local payload {fmt_bytes(local_bytes)}, autotuned S={s_auto}) ==")
+    reps = 2 if quick else 3
+    times = {}
+    rows = []
+    for s in (1, 2, 4):
+        res = run_ptrans(mesh, CT.ICI_DIRECT, n=n, b=b, reps=reps,
+                         nchunks=s, validate=(s == 1))
+        times[s] = res.times["best"]
+        record[f"ptrans_pipe/S{s}"] = {
+            "n": n, "nchunks": s, "time": times[s], "gflops": res.metric,
+            "schedule": res.details["schedule"]}
+        rows.append([f"S={s}", f"{times[s] * 1e3:.2f}ms",
+                     f"{times[1] / times[s]:.2f}x"])
+    t_auto = times[s_auto] if s_auto in times else run_ptrans(
+        mesh, CT.ICI_DIRECT, n=n, b=b, reps=reps, nchunks=s_auto,
+        validate=False).times["best"]
+    ratio = t_auto / times[1]
+    record["ptrans_pipe/auto"] = {
+        "n": n, "nchunks": s_auto, "time": t_auto,
+        "ratio_vs_monolithic": ratio}
+    rows.append([f"auto (S={s_auto})", f"{t_auto * 1e3:.2f}ms",
+                 f"{1 / ratio:.2f}x"])
+    print(table(rows, ["chunks", "time", "speedup vs mono"]))
     print()
 
 
@@ -140,6 +196,9 @@ def main(quick: bool = False, schedule=None):
         bcasts = [s for s in bcasts if s == schedule]
         reduces = [s for s in reduces if s == schedule]
     _hpl_lookahead(quick, bcasts, record)
+    if schedule in (None, "auto"):
+        # the strip pipeline resolves its own schedule per callsite
+        _ptrans_pipeline(quick, record)
     _bucketed_reduction(quick, reduces, record)
     save_result("overlap_bench", record)
     return record

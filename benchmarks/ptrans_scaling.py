@@ -14,12 +14,19 @@ from repro.core.ptrans import run_ptrans  # noqa: E402
 from repro.launch.mesh import make_torus_mesh  # noqa: E402
 
 
-def main(quick: bool = False, schedule=None):
+def main(quick: bool = False, schedule=None, pipeline=None):
     n_dev = len(jax.devices())
     grids = [g for g in (1, 2, 3) if g * g <= n_dev]
     n_base = 256 if quick else 512
     b = 64
     reps = 2
+    # pipeline = exchange chunk count (run.py --sweep-schedules S column);
+    # None keeps the cost-model resolution. A pipeline sweep pass skips the
+    # configurations the chunk count cannot affect (the 1x1 grid has no
+    # exchange to chunk).
+    nchunks = "auto" if pipeline in (None, "auto") else int(pipeline)
+    if pipeline is not None:
+        grids = [g for g in grids if g > 1]
 
     print("== PTRANS scaling (paper Fig. 12) ==")
     record = {}
@@ -38,10 +45,12 @@ def main(quick: bool = False, schedule=None):
                     continue
                 mesh = make_torus_mesh(g)
                 res = run_ptrans(mesh, ct, n=n, b=b, reps=reps,
-                                 schedule=schedule or "auto")
+                                 schedule=schedule or "auto",
+                                 nchunks=nchunks)
                 record[f"{label}/{ct.value}/g{g}"] = {
                     "n": n, "gflops": res.metric, "err": res.error,
                     "time": res.times["best"],
+                    "nchunks": res.details["nchunks"],
                     "schedule": res.details["schedule"]}
                 if g == grids[0]:
                     base_perf[ct.value] = res.metric

@@ -13,7 +13,10 @@ the cost model (repro.comm.autotune) and the driver prints the choices.
 registered for its primary collective op — plus an ``auto`` row showing what
 the cost model picks — and emits one comparison table per benchmark (the
 paper's Figs. 10-16 with schedules as columns), saved to
-``results/bench/schedule_sweep.json``.
+``results/bench/schedule_sweep.json``. Modules with a software-pipeline
+dimension (PTRANS chunk count, HPL lookahead depth) are additionally swept
+over S in {1, 2, 4, auto} under ``schedule="auto"`` and get a second
+pipeline-depth comparison table.
 
 ``--autotune`` microbenchmarks every registered schedule per op on the live
 devices, persists the per-size winners to ``results/tuning.json`` (loaded by
@@ -76,6 +79,12 @@ SWEEP_OPS = {
     "overlap_bench": "allreduce",
 }
 
+# modules with a software-pipeline dimension: --sweep-schedules also runs
+# them once per pipeline depth S (chunk count for PTRANS, lookahead depth
+# for HPL; "auto" = the cost-model resolution) under schedule="auto"
+PIPELINE_SWEEP = ("ptrans_scaling", "hpl_scaling")
+PIPELINE_DEPTHS = (1, 2, 4, "auto")
+
 
 def _parse_schedule(argv):
     """--schedule NAME or --schedule=NAME; validated against the registry."""
@@ -109,14 +118,18 @@ def _print_resolved(name, record):
               f"{', '.join(picks)}]")
 
 
-def _run_module(name, quick, schedule):
+def _run_module(name, quick, schedule, pipeline=None):
     print("\n" + "=" * 78)
     print(f"### benchmarks.{name}"
-          + (f" (schedule={schedule})" if schedule else ""))
+          + (f" (schedule={schedule})" if schedule else "")
+          + (f" (pipeline={pipeline})" if pipeline is not None else ""))
     print("=" * 78)
     t0 = time.time()
     mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-    record = mod.main(quick=quick, schedule=schedule)
+    kw = {"quick": quick, "schedule": schedule}
+    if pipeline is not None:
+        kw["pipeline"] = pipeline
+    record = mod.main(**kw)
     if schedule in (None, "auto"):
         _print_resolved(name, record)
     print(f"[{name} done in {time.time() - t0:.1f}s]")
@@ -162,9 +175,10 @@ def _autotune(quick):
                 if choice is None or choice not in schedules_for(op):
                     bad.append((op, sig, 1 << lg, choice))
     for op, sigs in table.entries.items():
+        base_op = op.split("@", 1)[0]  # callsite-tagged keys (bcast@hpl.panel)
         for sig, rows in sigs.items():
             for _, nm in rows:
-                if nm not in schedules_for(op):
+                if nm not in schedules_for(base_op):
                     bad.append((op, sig, "table", nm))
     if bad:
         print("UNREGISTERED auto resolutions:", bad)
@@ -219,6 +233,34 @@ def _sweep(modules, quick):
                     + [f"{cells[key].get(s, float('nan')):.4g}" for s in cols]
                     for key in cells]
             print(table(rows, ["config", "metric"] + cols))
+
+        # pipeline-depth columns: the same module swept over the software-
+        # pipeline dimension (chunk count / lookahead depth) under auto
+        if name in PIPELINE_SWEEP:
+            per_pipe = {}
+            for s in PIPELINE_DEPTHS:
+                try:
+                    per_pipe[f"S={s}"] = _run_module(name, quick, "auto",
+                                                     pipeline=s)
+                except Exception:  # noqa: BLE001
+                    failures.append(f"{name}[pipeline={s}]")
+                    print(f"[{name} pipeline={s} FAILED]\n"
+                          f"{traceback.format_exc()[-3000:]}")
+            sweep_record[f"{name}/pipeline"] = per_pipe
+            pcols = list(per_pipe)
+            pcells, pfield = {}, {}
+            for s, rec in per_pipe.items():
+                for key, field, v in _metric_rows(rec):
+                    pcells.setdefault(key, {})[s] = v
+                    pfield[key] = field
+            if pcells:
+                print(f"\n-- {name}: pipeline-depth comparison "
+                      f"(schedule=auto) --")
+                rows = [[key, pfield[key]]
+                        + [f"{pcells[key].get(s, float('nan')):.4g}"
+                           for s in pcols]
+                        for key in pcells]
+                print(table(rows, ["config", "metric"] + pcols))
     save_result("schedule_sweep", sweep_record)
     return failures
 

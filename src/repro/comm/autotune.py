@@ -67,19 +67,26 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.comm.topology import AxisTopology
 from repro.comm.types import TPU_V5E, HardwareModel
-from repro.roofline import alpha_beta_time
+from repro.roofline import alpha_beta_time, pipelined_alpha_beta_time
 
 # XLA-native collectives pay a fixed dispatch/rendezvous cost that the
 # hand-written ppermute pipelines do not; expressed in per-hop latency units
 # so it scales with the hardware model.
 NATIVE_SYNC_HOPS = 6.0
 
-# int8_ef wire ratio vs its f32 payload: 1 byte/elem + 4/BLOCK scale bytes
-# (repro.comm.compression, BLOCK=256) => (0.25 + 1/256) of the f32 bytes.
-INT8_WIRE_RATIO = 0.25 + 1.0 / 256.0
+# int8_ef wire ratio vs its f32 payload: the quantized chunk plus the
+# quantized requantization residual carried alongside on every hop
+# (repro.comm.compression quantize_ef, BLOCK=256) =>
+# 2 x (1 byte/elem + 4/BLOCK scale bytes) = 2 x (0.25 + 1/256) of f32.
+INT8_WIRE_RATIO = 2.0 * (0.25 + 1.0 / 256.0)
 
 # schedules auto must never select: they change numerics (explicit opt-in)
 LOSSY_SCHEDULES = frozenset({"int8_ef"})
+
+# software pipelining (engine.pipelined / chunked PTRANS / depth-d HPL):
+# chunk-count search ceiling and lookahead-depth ceiling for the resolvers
+MAX_PIPELINE_CHUNKS = 16
+MAX_LOOKAHEAD_DEPTH = 3
 
 # allreduce_tree pipelining: how many buckets should be in flight so bucket
 # k+1's backward compute hides bucket k's ring hops (paper Fig. 5/7 depth)
@@ -110,82 +117,91 @@ def _ranks(axes: Sequence[AxisTopology]) -> int:
 
 
 # ---------------------------------------------------------------------------
-# per-(op, schedule) analytic costs
+# per-(op, schedule) analytic shapes
+#
+# Every schedule is decomposed into *segments* — ``(hops, wire_bytes, kind)``
+# triples with kind in {"ici", "staged", "sync"} — priced either monolithic
+# (:meth:`CostModel.cost`) or software-pipelined into S chunks
+# (:func:`pipelined_cost`). "sync" segments are pure latency (the XLA-native
+# dispatch/rendezvous); under pipelining every chunk's collective pays them.
 # ---------------------------------------------------------------------------
 
-
-def _sync(hw: HardwareModel) -> float:
-    return NATIVE_SYNC_HOPS * hw.ici_latency
+Segment = Tuple[float, float, str]
 
 
-def _staged_cost(nbytes: float, axes, hw: HardwareModel) -> float:
+def _sync_seg(hw: HardwareModel) -> Segment:
+    return (NATIVE_SYNC_HOPS, 0.0, "sync")
+
+
+def _staged_segs(nbytes: float, axes, hw) -> List[Segment]:
     # every byte transits the staging domain: up to the host network once,
     # back fanned out to all ranks (paper Eq. 2's PCIe+MPI route)
     n = _ranks(axes)
-    return alpha_beta_time(2, (n + 1) * nbytes, hw, staged=True)
+    return [(2, (n + 1) * nbytes, "staged")]
 
 
-def _ring_rs_ag(nbytes: float, n: int, hw: HardwareModel) -> float:
+def _ring_rs_ag_segs(nbytes: float, n: int) -> List[Segment]:
     if n <= 1:
-        return 0.0
-    return alpha_beta_time(2 * (n - 1), 2 * (n - 1) / n * nbytes, hw)
+        return []
+    return [(2 * (n - 1), 2 * (n - 1) / n * nbytes, "ici")]
 
 
-def _cost_bcast_chain(S, axes, hw):
+def _segs_bcast_chain(S, axes, hw):
     n = _ranks(axes)
-    return alpha_beta_time(n - 1, (n - 1) * S, hw)
+    return [(n - 1, (n - 1) * S, "ici")]
 
 
-def _cost_bcast_native(S, axes, hw):
+def _segs_bcast_native(S, axes, hw):
     # bidirectional all-gather + select: half the hops, both link directions
     n = _ranks(axes)
-    return _sync(hw) + alpha_beta_time(math.ceil(n / 2), (n - 1) * S / 2, hw)
+    return [_sync_seg(hw), (math.ceil(n / 2), (n - 1) * S / 2, "ici")]
 
 
-def _cost_bcast_ring2d(S, axes, hw):
+def _segs_bcast_ring2d(S, axes, hw):
     # scatter + ring all-gather: 2(n-1) hops of S/n chunks
+    return _ring_rs_ag_segs(S, _ranks(axes))
+
+
+def _segs_allreduce_chain(S, axes, hw):
     n = _ranks(axes)
-    return _ring_rs_ag(S, n, hw)
+    return [(n - 1, (n - 1) * S, "ici")]
 
 
-def _cost_allreduce_chain(S, axes, hw):
-    n = _ranks(axes)
-    return alpha_beta_time(n - 1, (n - 1) * S, hw)
-
-
-def _cost_allreduce_native(S, axes, hw):
+def _segs_allreduce_native(S, axes, hw):
     # XLA ring reduce-scatter/all-gather over both directions
     n = _ranks(axes)
-    return _sync(hw) + alpha_beta_time(n - 1, (n - 1) / n * S, hw)
+    return [_sync_seg(hw), (n - 1, (n - 1) / n * S, "ici")]
 
 
-def _cost_allreduce_rs_ag(S, axes, hw):
-    return _ring_rs_ag(S, _ranks(axes), hw)
+def _segs_allreduce_rs_ag(S, axes, hw):
+    return _ring_rs_ag_segs(S, _ranks(axes))
 
 
-def _cost_allreduce_ring2d(S, axes, hw):
+def _segs_allreduce_ring2d(S, axes, hw):
     # one unidirectional ring pass per torus dimension
-    return sum(_ring_rs_ag(S, a.size, hw) for a in axes)
+    out = []
+    for a in axes:
+        out += _ring_rs_ag_segs(S, a.size)
+    return out
 
 
-def _cost_allreduce_int8_ef(S, axes, hw):
-    return _ring_rs_ag(S * INT8_WIRE_RATIO, _ranks(axes), hw)
+def _segs_allreduce_int8_ef(S, axes, hw):
+    return _ring_rs_ag_segs(S * INT8_WIRE_RATIO, _ranks(axes))
 
 
-def _cost_a2a_native(S, axes, hw):
+def _segs_a2a_native(S, axes, hw):
     n = _ranks(axes)
-    return _sync(hw) + alpha_beta_time(math.ceil(n / 2),
-                                       (n - 1) / n * S / 2, hw)
+    return [_sync_seg(hw), (math.ceil(n / 2), (n - 1) / n * S / 2, "ici")]
 
 
-def _cost_a2a_chain(S, axes, hw):
+def _segs_a2a_chain(S, axes, hw):
     # tile at ring distance d travels d hops: sum d = n(n-1)/2 hops of S/n
     n = _ranks(axes)
-    return alpha_beta_time(n * (n - 1) / 2, (n - 1) / 2 * S, hw)
+    return [(n * (n - 1) / 2, (n - 1) / 2 * S, "ici")]
 
 
-def _cost_exchange_direct(S, axes, hw):
-    return alpha_beta_time(1, S, hw)
+def _segs_exchange_direct(S, axes, hw):
+    return [(1, S, "ici")]
 
 
 def _pg(axes) -> int:
@@ -194,46 +210,157 @@ def _pg(axes) -> int:
     return max(int(round(math.sqrt(_ranks(axes)))), 1)
 
 
-def _cost_transpose_direct(S, axes, hw):
+def _segs_transpose_direct(S, axes, hw):
     # dimension-ordered route to the (r,c)<->(c,r) partner: <= pg links
     pg = _pg(axes)
     if pg <= 1:
-        return 0.0  # no exchange on a 1x1 grid
-    return alpha_beta_time(pg, S, hw)
+        return []  # no exchange on a 1x1 grid
+    return [(pg, S, "ici")]
 
 
-def _cost_transpose_ring2d(S, axes, hw):
+def _segs_transpose_ring2d(S, axes, hw):
     # row-phase ring all-gather (pg-1 unit-block hops) + column-phase chain
     # of the pg-block relay stack (paper Fig. 8 two-phase route)
     pg = _pg(axes)
     if pg <= 1:
-        return 0.0
-    return (alpha_beta_time(pg - 1, (pg - 1) * S, hw)
-            + alpha_beta_time(pg - 1, (pg - 1) * pg * S, hw))
+        return []
+    return [(pg - 1, (pg - 1) * S, "ici"),
+            (pg - 1, (pg - 1) * pg * S, "ici")]
 
 
-_COSTS: Dict[Tuple[str, str], Callable] = {
-    ("bcast", "chain"): _cost_bcast_chain,
-    ("bcast", "native"): _cost_bcast_native,
-    ("bcast", "ring2d"): _cost_bcast_ring2d,
-    ("bcast", "staged"): _staged_cost,
-    ("allreduce", "chain"): _cost_allreduce_chain,
-    ("allreduce", "native"): _cost_allreduce_native,
-    ("allreduce", "rs_ag"): _cost_allreduce_rs_ag,
-    ("allreduce", "ring2d"): _cost_allreduce_ring2d,
-    ("allreduce", "int8_ef"): _cost_allreduce_int8_ef,
-    ("allreduce", "staged"): _staged_cost,
-    ("all_to_all_tiles", "native"): _cost_a2a_native,
-    ("all_to_all_tiles", "chain"): _cost_a2a_chain,
-    ("all_to_all_tiles", "staged"): _staged_cost,
-    ("ring_exchange", "direct"): _cost_exchange_direct,
-    ("ring_exchange", "chain"): _cost_exchange_direct,
-    ("ring_exchange", "staged"): _staged_cost,
-    ("grid_transpose", "direct"): _cost_transpose_direct,
-    ("grid_transpose", "chain"): _cost_transpose_direct,
-    ("grid_transpose", "ring2d"): _cost_transpose_ring2d,
-    ("grid_transpose", "staged"): _staged_cost,
+_SEGS: Dict[Tuple[str, str], Callable] = {
+    ("bcast", "chain"): _segs_bcast_chain,
+    ("bcast", "native"): _segs_bcast_native,
+    ("bcast", "ring2d"): _segs_bcast_ring2d,
+    ("bcast", "staged"): _staged_segs,
+    ("allreduce", "chain"): _segs_allreduce_chain,
+    ("allreduce", "native"): _segs_allreduce_native,
+    ("allreduce", "rs_ag"): _segs_allreduce_rs_ag,
+    ("allreduce", "ring2d"): _segs_allreduce_ring2d,
+    ("allreduce", "int8_ef"): _segs_allreduce_int8_ef,
+    ("allreduce", "staged"): _staged_segs,
+    ("all_to_all_tiles", "native"): _segs_a2a_native,
+    ("all_to_all_tiles", "chain"): _segs_a2a_chain,
+    ("all_to_all_tiles", "staged"): _staged_segs,
+    ("ring_exchange", "direct"): _segs_exchange_direct,
+    ("ring_exchange", "chain"): _segs_exchange_direct,
+    ("ring_exchange", "staged"): _staged_segs,
+    ("grid_transpose", "direct"): _segs_transpose_direct,
+    ("grid_transpose", "chain"): _segs_transpose_direct,
+    ("grid_transpose", "ring2d"): _segs_transpose_ring2d,
+    ("grid_transpose", "staged"): _staged_segs,
 }
+
+
+def segments(op: str, schedule: str, nbytes: float,
+             axes: Sequence[AxisTopology],
+             hw: HardwareModel = TPU_V5E) -> Optional[List[Segment]]:
+    """The (hops, wire bytes, kind) decomposition of one schedule run, or
+    None for schedules the model has no formula for."""
+    fn = _SEGS.get((op, schedule))
+    if fn is None:
+        return None
+    if any(a.kind == "staging" for a in axes):
+        return _staged_segs(nbytes, axes, hw)
+    return fn(float(nbytes), tuple(axes), hw)
+
+
+def _seg_time(seg: Segment, hw: HardwareModel) -> float:
+    hops, wire, kind = seg
+    if kind == "sync":
+        return hops * hw.ici_latency
+    return alpha_beta_time(hops, wire, hw, staged=kind == "staged")
+
+
+def _seg_time_pipelined(seg: Segment, nchunks: int, hw: HardwareModel) -> float:
+    hops, wire, kind = seg
+    if kind == "sync":
+        # every chunk's collective pays the dispatch/rendezvous in full
+        return nchunks * hops * hw.ici_latency
+    return pipelined_alpha_beta_time(hops, wire, nchunks, hw,
+                                     staged=kind == "staged")
+
+
+def pipelined_cost(op: str, schedule: str, nbytes: float,
+                   axes: Sequence[AxisTopology], nchunks: int,
+                   hw: HardwareModel = TPU_V5E) -> float:
+    """Predicted seconds for the schedule split into ``nchunks`` software-
+    pipelined chunks (``nchunks=1`` equals :meth:`CostModel.cost`); ``inf``
+    for schedules with no formula."""
+    segs = segments(op, schedule, nbytes, axes, hw)
+    if segs is None:
+        return float("inf")
+    return sum(_seg_time_pipelined(s, max(int(nchunks), 1), hw) for s in segs)
+
+
+def best_nchunks(op: str, schedule: str, nbytes: float,
+                 axes: Sequence[AxisTopology], hw: HardwareModel = TPU_V5E, *,
+                 max_chunks: int = MAX_PIPELINE_CHUNKS) -> Tuple[int, float]:
+    """The power-of-two chunk count minimizing :func:`pipelined_cost` —
+    pipeline fill cost (S-1 extra stages of per-hop latency) against
+    per-chunk wire time. Ties break toward fewer chunks. Returns
+    ``(nchunks, predicted_seconds)``; (1, cost) when unpriceable."""
+    best_s, best_c = 1, pipelined_cost(op, schedule, nbytes, axes, 1, hw)
+    if not math.isfinite(best_c):
+        return 1, best_c
+    s = 2
+    while s <= max_chunks:
+        c = pipelined_cost(op, schedule, nbytes, axes, s, hw)
+        if c < best_c:
+            best_s, best_c = s, c
+        s *= 2
+    return best_s, best_c
+
+
+def choose_hpl_depth(*, b: int, m: int, axes: Sequence[AxisTopology],
+                     hw: HardwareModel = TPU_V5E, model=None, resolve=None,
+                     max_depth: int = MAX_LOOKAHEAD_DEPTH) -> int:
+    """Lookahead depth for HPL: how many panel pipelines to keep in flight.
+
+    Per iteration the factorization broadcasts one b x b diagonal block along
+    each torus dimension and one b x m panel along each; the bulk trailing
+    GEMM offers ``2 m^2 b`` FLOPs of cover. Depth d hides d iterations'
+    broadcast latency behind one bulk update, so::
+
+        depth = clamp(ceil(T_bcast_iter / T_gemm_iter), 1, max_depth)
+
+    — latency-bound small blocks on large tori go deep, compute-bound large
+    local matrices stay at 1 (one iteration of cover already suffices).
+    Each extra depth costs d thin strip GEMMs (~2b/m of the bulk FLOPs) and
+    one more carried panel set, which is why the ceiling stays small.
+
+    ``resolve(op, nbytes, ax, callsite)`` optionally names the schedule the
+    *caller* will actually run per broadcast (an engine's
+    ``schedule_for``, honoring engine-wide overrides and HOST_STAGED) —
+    without it the broadcasts are priced on the model's own preferred
+    schedule, which under-prices t_comm whenever a costlier schedule is
+    forced (exactly the case deep lookahead exists for).
+    """
+    if model is None:
+        model = default_cost_model()
+    # keep both sides of the ratio on ONE hardware model: the model's, when
+    # it carries one (an engine with a custom CostModel must not have its
+    # comm side priced on that hw but its GEMM side on the v5e default)
+    hw = getattr(model, "hw", None) or hw
+    t_comm = 0.0
+    for ax in tuple(axes):
+        for nbytes, callsite in ((b * b * 4, "hpl.block"),
+                                 (b * m * 4, "hpl.panel")):
+            if resolve is not None:
+                sched = resolve("bcast", nbytes, ax, callsite)
+            else:
+                sched = model.choose("bcast", nbytes, (ax,),
+                                     callsite=callsite) or "chain"
+            t_comm += model.cost("bcast", sched, nbytes, (ax,))
+    t_gemm = 2.0 * float(m) * m * b / hw.peak_flops
+    if t_gemm <= 0.0:
+        return 1
+    if not math.isfinite(t_comm):
+        # an unpriceable (user-registered / measured-only) schedule: the
+        # model can't size the ratio, but infinite comm is comm-bound —
+        # clamp to the ceiling instead of overflowing on ceil(inf)
+        return max_depth
+    return max(1, min(int(math.ceil(t_comm / t_gemm)), max_depth))
 
 
 # ---------------------------------------------------------------------------
@@ -248,16 +375,25 @@ class TuningTable:
     ``entries[op][axis_sig]`` is an ascending list of ``[max_bytes, name]``
     pairs; a ``None`` max_bytes entry is the open-ended tail. Lookup returns
     the first entry whose bound covers ``nbytes``.
+
+    The op key may carry a **callsite tag** — ``"bcast@hpl.panel"`` — for
+    winners measured in a callsite-specific pattern (e.g. HPL's panel bcast
+    issued back-to-back with the block bcast, vs an isolated bcast). Lookup
+    with a callsite consults the tagged entry first and falls back to the
+    untagged op.
     """
     hw: str = TPU_V5E.name
     entries: Dict[str, Dict[str, List[Tuple[Optional[int], str]]]] = \
         field(default_factory=dict)
     meta: Dict[str, object] = field(default_factory=dict)
 
-    def lookup(self, op: str, sig: str, nbytes: int) -> Optional[str]:
-        for bound, name in self.entries.get(op, {}).get(sig, ()):
-            if bound is None or nbytes <= bound:
-                return name
+    def lookup(self, op: str, sig: str, nbytes: int,
+               callsite: Optional[str] = None) -> Optional[str]:
+        keys = ([f"{op}@{callsite}", op] if callsite else [op])
+        for key in keys:
+            for bound, name in self.entries.get(key, {}).get(sig, ()):
+                if bound is None or nbytes <= bound:
+                    return name
         return None
 
     def set(self, op: str, sig: str,
@@ -309,24 +445,36 @@ class CostModel:
     A measured :class:`TuningTable` (when present) overrides the analytic
     alpha-beta ranking for the (op, axis signature) pairs it covers; the
     analytic model covers everything else, so ``auto`` always resolves.
-    Choices are memoized by ``(op, nbytes, axis signature)`` — resolution is
-    a pure function of static data, hence identical across processes.
+    Choices are memoized by ``(op, nbytes, axis signature, callsite)`` —
+    resolution is a pure function of static data, hence identical across
+    processes.
     """
     hw: HardwareModel = TPU_V5E
     table: Optional[TuningTable] = None
-    _cache: Dict[Tuple[str, int, str], str] = field(default_factory=dict,
-                                                    repr=False)
+    _cache: Dict[Tuple[str, int, str, Optional[str]], str] = \
+        field(default_factory=dict, repr=False)
 
     def cost(self, op: str, schedule: str, nbytes: float,
              axes: Sequence[AxisTopology]) -> float:
         """Predicted seconds; ``inf`` for schedules the model cannot price
         (e.g. user-registered ones with no formula — never chosen by auto)."""
-        fn = _COSTS.get((op, schedule))
-        if fn is None:
+        segs = segments(op, schedule, nbytes, axes, self.hw)
+        if segs is None:
             return float("inf")
-        if any(a.kind == "staging" for a in axes):
-            return _staged_cost(nbytes, axes, self.hw)
-        return fn(float(nbytes), tuple(axes), self.hw)
+        return sum(_seg_time(s, self.hw) for s in segs)
+
+    def pipelined_cost(self, op: str, schedule: str, nbytes: float,
+                       axes: Sequence[AxisTopology], nchunks: int) -> float:
+        """Predicted seconds with the payload split into ``nchunks``
+        software-pipelined chunks (:func:`pipelined_cost`)."""
+        return pipelined_cost(op, schedule, nbytes, axes, nchunks, self.hw)
+
+    def best_nchunks(self, op: str, schedule: str, nbytes: float,
+                     axes: Sequence[AxisTopology], *,
+                     max_chunks: int = MAX_PIPELINE_CHUNKS
+                     ) -> Tuple[int, float]:
+        return best_nchunks(op, schedule, nbytes, axes, self.hw,
+                            max_chunks=max_chunks)
 
     def rank(self, op: str, nbytes: float, axes: Sequence[AxisTopology], *,
              include_lossy: bool = False) -> List[Tuple[str, float]]:
@@ -346,16 +494,21 @@ class CostModel:
                 rows.append((name, c))
         return sorted(rows, key=lambda r: (r[1], r[0] != default, r[0]))
 
-    def choose(self, op: str, nbytes: int,
-               axes: Sequence[AxisTopology]) -> Optional[str]:
-        """The schedule ``auto`` resolves to, or None if nothing is priced."""
+    def choose(self, op: str, nbytes: int, axes: Sequence[AxisTopology],
+               callsite: Optional[str] = None) -> Optional[str]:
+        """The schedule ``auto`` resolves to, or None if nothing is priced.
+
+        ``callsite`` is an optional tag (``"hpl.panel"``, ``"ptrans.
+        exchange"``) naming the call pattern; measured tuning-table entries
+        keyed ``op@callsite`` override the untagged op entry for it. The
+        analytic ranking is callsite-independent."""
         sig = axis_signature(axes)
-        key = (op, int(nbytes), sig)
+        key = (op, int(nbytes), sig, callsite)
         if key in self._cache:
             return self._cache[key]
         name = None
         if self.table is not None:
-            name = self.table.lookup(op, sig, int(nbytes))
+            name = self.table.lookup(op, sig, int(nbytes), callsite)
             if name is not None:
                 from repro.comm.engine import schedules_for
                 if name not in schedules_for(op) or name in LOSSY_SCHEDULES:
@@ -460,6 +613,25 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
     nranks = int(np.prod([mesh.shape[a] for a in names]))
     elems = max(nbytes // 4, 1)
 
+    if op == "bcast@hpl.panel":
+        # HPL's paired broadcasts on the torus row axis: a b x b diagonal
+        # block bcast immediately followed by the dependent panel bcast being
+        # measured — the callsite pattern an isolated bcast misses.
+        rows = mesh.shape[names[0]]
+        blk = jnp.asarray(np.ones((rows, 64 * 64), np.float32))
+        x = jnp.asarray(np.ones((rows, elems), np.float32))
+        spec = P(names[0], None)
+
+        def body(vb, vp):
+            b0 = engine.bcast(vb[0], names[0], 0)
+            panel = vp[0] * b0[0]  # the trsm dependency block -> panel
+            return engine.bcast(panel, names[0], 0)[None]
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, blk, x, reps=reps, warmup=1)
+        return t
+
     if op == "grid_transpose":
         pg = mesh.shape[names[0]]
         side = max(int(math.sqrt(elems)), 1)
@@ -493,7 +665,8 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
 
 
 def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
-                                           "ring_exchange", "grid_transpose"),
+                                           "ring_exchange", "grid_transpose",
+                                           "bcast@hpl.panel"),
                   sizes: Optional[Sequence[int]] = None, reps: int = 3,
                   quick: bool = False, verbose: bool = True
                   ) -> Tuple[TuningTable, Dict]:
@@ -501,8 +674,13 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     build a :class:`TuningTable` of per-size winners.
 
     Ring ops run over a ring of all devices; ``grid_transpose`` over the
-    largest square torus. Returns ``(table, record)`` where ``record`` holds
-    the raw per-(op, schedule, size) timings for the bench artifact."""
+    largest square torus. An ``op@callsite`` entry (``"bcast@hpl.panel"``)
+    measures the op inside that callsite's pattern — here HPL's panel bcast
+    back-to-back with the diagonal-block bcast on the torus row axis — and
+    lands under the tagged tuning-table key, consulted first when the engine
+    resolves with the matching callsite. Returns ``(table, record)`` where
+    ``record`` holds the raw per-(op, schedule, size) timings for the bench
+    artifact."""
     import jax
 
     from repro.comm.engine import schedules_for
@@ -523,12 +701,25 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                               "backend": jax.default_backend()})
     record: Dict[str, Dict] = {}
     for op in ops:
-        mesh = torus if op == "grid_transpose" else ring
+        base_op = op.split("@", 1)[0]
+        on_torus = op == "grid_transpose" or "@" in op
+        mesh = torus if on_torus else ring
         if mesh is None:
             continue
         topo = MeshTopology.from_mesh(mesh)
-        sig = axis_signature([topo.axis(a) for a in topo.names()])
-        names = [s for s in schedules_for(op) if s not in LOSSY_SCHEDULES]
+        if "@" in op:
+            # callsite patterns are measured along one torus axis but the
+            # HPL pattern is row/column-symmetric: the winner is stored
+            # under every single-axis signature so the l_panel bcast on
+            # "cols" (sig torus_col[pg]) matches too
+            sig = axis_signature([topo.axis(topo.names()[0])])
+            extra_sigs = [axis_signature([topo.axis(a)])
+                          for a in topo.names()[1:]]
+        else:
+            sig = axis_signature([topo.axis(a) for a in topo.names()])
+            extra_sigs = []
+        names = [s for s in schedules_for(base_op)
+                 if s not in LOSSY_SCHEDULES]
         winners, measured_sizes = [], []
         for S in sizes:
             times = {}
@@ -549,5 +740,7 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                                   for n in sorted(times))
                 print(f"  [autotune] {op:16s} {S:>9d}B -> {best:8s} ({ladder})")
         if winners:
-            table.set(op, sig, _winner_bounds(measured_sizes, winners))
+            bounds = _winner_bounds(measured_sizes, winners)
+            for s in [sig] + extra_sigs:
+                table.set(op, s, bounds)
     return table, record

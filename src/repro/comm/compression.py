@@ -40,6 +40,30 @@ def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, size: int) -> jnp.ndar
     return x.reshape(shape)
 
 
+def quantize_ef(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray, jnp.ndarray]:
+    """fp32 -> (q, scale, qr, rscale): the quantized payload plus the
+    quantized *requantization residual* carried alongside it.
+
+    The residual chunk is what a bare :func:`quantize` drops on the floor at
+    every hop; sending it (itself int8-quantized — its own residual is
+    second-order, O(1/127^2) of the payload) tightens a hop-by-hop lossy
+    ring from O(hops/127) to O(hops/127^2) relative error at 2x the int8
+    wire bytes — still half of fp32."""
+    flat = x.astype(jnp.float32)
+    q, scale = quantize(flat)
+    r = flat - dequantize(q, scale, flat.shape, flat.size)
+    qr, rscale = quantize(r)
+    return q, scale, qr, rscale
+
+
+def dequantize_ef(q: jnp.ndarray, scale: jnp.ndarray, qr: jnp.ndarray,
+                  rscale: jnp.ndarray, shape, size: int) -> jnp.ndarray:
+    """Reconstruct payload + residual from the :func:`quantize_ef` wire."""
+    return (dequantize(q, scale, shape, size)
+            + dequantize(qr, rscale, shape, size))
+
+
 def compressed_psum(x: jnp.ndarray, axis: str, error: jnp.ndarray, *,
                     engine=None, schedule: Optional[str] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -22,6 +22,13 @@ Ops
                                               Fig. 5/7 applied to gradients
 ``ring_exchange(fwd, bwd, axis)``             b_eff bidirectional neighbor swap
 ``grid_transpose(x, axes, pg)``               PTRANS partner exchange on a torus
+``pipelined(op, x, axis, nchunks=...)``       software-pipelining transform:
+                                              split any single-payload op
+                                              into S in-flight chunks whose
+                                              per-chunk consumer compute
+                                              overlaps the next chunk's wire
+                                              hops (chunk count from the
+                                              autotune fill-cost model)
 
 Schedules
 ---------
@@ -41,7 +48,9 @@ Schedules
             the per-hop accumulate is the Pallas-fused step in
             :mod:`repro.kernels.ring`.
 ``int8_ef`` int8 block-quantized allreduce wire format riding the ``rs_ag``
-            ring (error feedback is carried by the caller — see
+            ring, with the per-hop requantization residual carried alongside
+            the payload (error feedback *inside* the ring; cross-step error
+            feedback is carried by the caller — see
             :func:`repro.comm.compression.compressed_psum`).
 ``direct``  point-to-point ``ppermute`` (ring_exchange / grid_transpose).
 
@@ -351,19 +360,24 @@ def _allreduce_ring2d(engine, x, axis):
 @register_schedule("allreduce", "int8_ef")
 def _allreduce_int8_ef(engine, x, axis):
     # int8 block-quantized wire format over the bandwidth-optimal ring, with
-    # the quantization applied *per ring chunk, per hop*: every ppermute
-    # moves an int8 payload plus fp32 per-block scales (1 byte/elem +
-    # 4/BLOCK bytes/elem on every hop), never a whole-bucket fp32 buffer.
+    # the quantization applied *per ring chunk, per hop* and the per-hop
+    # requantization residual carried ALONGSIDE the payload: every ppermute
+    # moves the int8 chunk plus the int8-quantized residual of that same
+    # quantization (2 bytes/elem + 8/BLOCK bytes/elem of scales per hop),
+    # never a whole-bucket fp32 buffer. The receiver reconstructs
+    # payload + residual, so the error each hop leaks is only the residual's
+    # *own* requantization — second-order, O(1/127^2) of the chunk magnitude
+    # per hop — tightening the lossy bound from O(hops/127) to O(hops/127^2)
+    # ~ O(1/127) overall (the ROADMAP in-ring error-feedback item).
     # Reduce-scatter hops quantize the outgoing partial-sum chunk right
-    # before the shift and dequantize after; the all-gather half quantizes
-    # each owner's reduced chunk once and forwards the int8 payload
-    # unchanged around the ring. Accumulation stays in fp32 via the fused
-    # Pallas step. Lossy in general (partial sums are requantized); exact
-    # whenever every hop's chunk is exactly representable by the block
-    # quantizer — see tests/dist/test_overlap.py. The schedule is stateless:
-    # error feedback across steps is carried by the caller, see
-    # :func:`repro.comm.compression.compressed_psum`.
-    from repro.comm.compression import dequantize, quantize
+    # before the shift; the all-gather half quantizes each owner's reduced
+    # chunk (and its residual) once and forwards both int8 payloads
+    # unchanged around the ring, so all ranks agree bitwise. Accumulation
+    # stays in fp32 via the fused Pallas step. Exact whenever every hop's
+    # chunk is block-representable — see tests/dist/test_overlap.py. The
+    # schedule stays stateless: error feedback *across steps* is carried by
+    # the caller, see :func:`repro.comm.compression.compressed_psum`.
+    from repro.comm.compression import dequantize_ef, quantize_ef
     if isinstance(axis, (tuple, list)):
         for ax in axis:
             x = _allreduce_int8_ef(engine, x, ax)
@@ -375,32 +389,31 @@ def _allreduce_int8_ef(engine, x, axis):
     stack = _pack_chunks(x.astype(jnp.float32), n)
 
     def _shift_q(chunk):
-        # one ring hop with the quantized wire format
-        q, scale = quantize(chunk)
-        q = _ring_shift(q, axis, +1)
-        scale = _ring_shift(scale, axis, +1)
-        return q, scale
+        # one ring hop of the quantized wire format: payload chunk plus its
+        # requantization-residual chunk travel together
+        wire = quantize_ef(chunk)
+        wire = tuple(_ring_shift(w, axis, +1) for w in wire)
+        return dequantize_ef(*wire, chunk.shape, chunk.size)
 
-    # reduce-scatter: same chunk walk as rs_ag, int8 payload per hop
+    # reduce-scatter: same chunk walk as rs_ag, int8+residual per hop
     for s in range(n - 1):
         send = _chunk(stack, (idx - s) % n)
-        q, scale = _shift_q(send)
-        recv = dequantize(q, scale, send.shape, send.size)
+        recv = _shift_q(send)
         local = _chunk(stack, (idx - 1 - s) % n)
         stack = _set_chunk(stack, (idx - 1 - s) % n,
                            _fused_add(engine, local, recv))
 
-    # all-gather: quantize the owned chunk once; every rank (owner included)
-    # keeps the dequantized wire value so all ranks agree bitwise
+    # all-gather: quantize the owned chunk (and its residual) once; every
+    # rank (owner included) keeps the reconstructed wire value so all ranks
+    # agree bitwise
     own = _chunk(stack, (idx + 1) % n)
-    q, scale = quantize(own)
+    wire = quantize_ef(own)
     stack = _set_chunk(stack, (idx + 1) % n,
-                       dequantize(q, scale, own.shape, own.size))
+                       dequantize_ef(*wire, own.shape, own.size))
     for s in range(n - 1):
-        q = _ring_shift(q, axis, +1)
-        scale = _ring_shift(scale, axis, +1)
+        wire = tuple(_ring_shift(w, axis, +1) for w in wire)
         stack = _set_chunk(stack, (idx - s) % n,
-                           dequantize(q, scale, own.shape, own.size))
+                           dequantize_ef(*wire, own.shape, own.size))
     return stack.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
 
 
@@ -543,13 +556,17 @@ class CollectiveEngine:
     # -- schedule resolution ------------------------------------------------
 
     def schedule_for(self, op: str, override: Optional[str] = None, *,
-                     nbytes: Optional[int] = None, axis=None) -> str:
+                     nbytes: Optional[int] = None, axis=None,
+                     callsite: Optional[str] = None) -> str:
         """The schedule name this engine runs ``op`` with.
 
         With ``nbytes`` (message payload) and ``axis`` (a topology axis name
         or tuple), ``auto`` resolves through the cost model; without them it
         falls back to the static per-op default, so provenance queries keep
-        working outside any callsite."""
+        working outside any callsite. ``callsite`` is an optional tag
+        (``"hpl.panel"``) letting measured tuning-table entries distinguish
+        call patterns — HPL's back-to-back bcasts tune independently of an
+        isolated bcast."""
         if op not in OPS:
             raise ValueError(f"unknown collective op {op!r}; ops are {OPS}")
         if override is not None and override != "auto" \
@@ -566,31 +583,59 @@ class CollectiveEngine:
         if name != "auto" and name in _REGISTRY[op]:
             return name
         # "auto", or an engine-wide name that doesn't cover this op
-        return self._auto_choice(op, nbytes, axis)
+        return self._auto_choice(op, nbytes, axis, callsite)
 
-    def _auto_choice(self, op: str, nbytes: Optional[int], axis) -> str:
-        """Cost-model resolution; static default when the model has nothing
-        to price (no topology / payload / unknown axis)."""
-        if nbytes is None or axis is None or self.topology is None:
-            return _AUTO[op]
+    def _axes_for(self, axis) -> Optional[Tuple]:
+        if axis is None or self.topology is None:
+            return None
         try:
             names = axis if isinstance(axis, (tuple, list)) else (axis,)
-            axes = tuple(self.topology.axis(a) for a in names)
+            return tuple(self.topology.axis(a) for a in names)
         except KeyError:
+            return None
+
+    def _model(self):
+        if self.cost_model is not None:
+            return self.cost_model
+        from repro.comm.autotune import default_cost_model
+        return default_cost_model()
+
+    def _auto_choice(self, op: str, nbytes: Optional[int], axis,
+                     callsite: Optional[str] = None) -> str:
+        """Cost-model resolution; static default when the model has nothing
+        to price (no topology / payload / unknown axis)."""
+        axes = self._axes_for(axis)
+        if nbytes is None or axes is None:
             return _AUTO[op]
-        model = self.cost_model
-        if model is None:
-            from repro.comm.autotune import default_cost_model
-            model = default_cost_model()
-        choice = model.choose(op, int(nbytes), axes)
+        choice = self._model().choose(op, int(nbytes), axes,
+                                      callsite=callsite)
         if choice is not None and choice in _REGISTRY[op]:
             return choice
         return _AUTO[op]
 
     def _resolve(self, op: str, override: Optional[str], *,
-                 nbytes: Optional[int] = None, axis=None) -> Callable:
+                 nbytes: Optional[int] = None, axis=None,
+                 callsite: Optional[str] = None) -> Callable:
         return _REGISTRY[op][self.schedule_for(op, override, nbytes=nbytes,
-                                               axis=axis)]
+                                               axis=axis, callsite=callsite)]
+
+    def pipeline_chunks(self, op: str, *, nbytes: Optional[int] = None,
+                        axis=None, schedule: Optional[str] = None,
+                        callsite: Optional[str] = None) -> int:
+        """The chunk count ``pipelined`` resolves ``nchunks="auto"`` to:
+        :func:`repro.comm.autotune.best_nchunks` on the resolved schedule's
+        hop/wire decomposition — pipeline fill cost against per-chunk
+        latency. 1 (monolithic) when the model has nothing to price."""
+        axes = self._axes_for(axis)
+        if nbytes is None or axes is None:
+            return 1
+        name = self.schedule_for(op, schedule, nbytes=nbytes, axis=axis,
+                                 callsite=callsite)
+        model = self._model()
+        if hasattr(model, "best_nchunks"):  # CostModel: carries its own hw
+            return model.best_nchunks(op, name, int(nbytes), axes)[0]
+        from repro.comm.autotune import best_nchunks
+        return best_nchunks(op, name, int(nbytes), axes)[0]
 
     def _check_axis(self, axis):
         if self.topology is None:
@@ -600,29 +645,33 @@ class CollectiveEngine:
 
     # -- ops (all run inside shard_map bodies) ------------------------------
 
-    def bcast(self, val, axis, src, *, schedule: Optional[str] = None):
+    def bcast(self, val, axis, src, *, schedule: Optional[str] = None,
+              callsite: Optional[str] = None):
         """Broadcast ``val`` from rank ``src`` (traced scalar ok) along
         ``axis``."""
         self._check_axis(axis)
         fn = self._resolve("bcast", schedule, nbytes=_payload_bytes(val),
-                           axis=axis)
+                           axis=axis, callsite=callsite)
         return fn(self, val, axis, src)
 
     def all_to_all_tiles(self, x, axis, *, split_axis: int, concat_axis: int,
-                         schedule: Optional[str] = None):
+                         schedule: Optional[str] = None,
+                         callsite: Optional[str] = None):
         """Exchange tiles so rank i's j-th split lands on rank j, ordered by
         source rank on ``concat_axis``."""
         self._check_axis(axis)
         fn = self._resolve("all_to_all_tiles", schedule,
-                           nbytes=_payload_bytes(x), axis=axis)
+                           nbytes=_payload_bytes(x), axis=axis,
+                           callsite=callsite)
         return fn(self, x, axis, split_axis=split_axis,
                   concat_axis=concat_axis)
 
-    def allreduce(self, x, axis, *, schedule: Optional[str] = None):
+    def allreduce(self, x, axis, *, schedule: Optional[str] = None,
+                  callsite: Optional[str] = None):
         """Sum ``x`` over all ranks of ``axis`` (a name or tuple of names)."""
         self._check_axis(axis)
         fn = self._resolve("allreduce", schedule, nbytes=_payload_bytes(x),
-                           axis=axis)
+                           axis=axis, callsite=callsite)
         return fn(self, x, axis)
 
     def bucket_bytes_for(self, axis) -> int:
@@ -680,22 +729,103 @@ class CollectiveEngine:
         return jax.tree.unflatten(treedef, out)
 
     def ring_exchange(self, x_fwd, x_bwd, axis, *,
-                      schedule: Optional[str] = None):
+                      schedule: Optional[str] = None,
+                      callsite: Optional[str] = None):
         """Bidirectional neighbor exchange (b_eff pattern). Returns
         (recv_from_left, recv_from_right)."""
         self._check_axis(axis)
         fn = self._resolve("ring_exchange", schedule,
-                           nbytes=_payload_bytes(x_fwd), axis=axis)
+                           nbytes=_payload_bytes(x_fwd), axis=axis,
+                           callsite=callsite)
         return fn(self, x_fwd, x_bwd, axis)
 
     def grid_transpose(self, x, axes, pg: int, *,
-                       schedule: Optional[str] = None):
+                       schedule: Optional[str] = None,
+                       callsite: Optional[str] = None):
         """Exchange with the (r,c)<->(c,r) partner on a ``pg`` x ``pg``
         torus flattened over ``axes`` (PTRANS §2.2.2)."""
         self._check_axis(axes)
         fn = self._resolve("grid_transpose", schedule,
-                           nbytes=_payload_bytes(x), axis=axes)
+                           nbytes=_payload_bytes(x), axis=axes,
+                           callsite=callsite)
         return fn(self, x, axes, pg)
+
+    # -- pipelined transform ------------------------------------------------
+
+    def pipelined(self, op: str, x, axis, *, nchunks="auto",
+                  split_axis: int = 0, concat_axis: Optional[int] = None,
+                  consume: Optional[Callable] = None,
+                  schedule: Optional[str] = None,
+                  callsite: Optional[str] = None, **opkw):
+        """Software-pipeline any single-payload collective.
+
+        ``x`` is split into ``nchunks`` near-equal strips along
+        ``split_axis``; each strip routes through ``op``'s registered
+        schedule *independently*, and ``consume(strip_out, start)`` (if
+        given) is applied to each strip as it lands — the strips carry no
+        data dependence on each other, so XLA overlaps strip i's consumer
+        compute with strip i+1's wire hops (the chunked in-flight pipeline
+        of the ACCL latency studies). Results are concatenated along
+        ``concat_axis`` (default ``split_axis``; pass a different axis when
+        ``consume`` reorients the strip, e.g. PTRANS's transpose-add).
+
+        ``nchunks="auto"`` resolves through :meth:`pipeline_chunks` (the
+        alpha-beta fill-cost model); any value is clamped to the strip count
+        available along ``split_axis``, so over-chunking degrades gracefully
+        to one row per strip. ``nchunks=1`` is exactly the monolithic op —
+        and every chunking is *bit-identical* to it for data-movement ops
+        (bcast / grid_transpose), since chunk boundaries only partition the
+        payload.
+
+        Extra op operands ride ``opkw``: ``src=`` for bcast, ``pg=`` for
+        grid_transpose.
+        """
+        supported = ("bcast", "allreduce", "grid_transpose")
+        if op not in supported:
+            raise ValueError(
+                f"pipelined supports single-payload ops {supported}, "
+                f"got {op!r}")
+        required = {"bcast": "src", "grid_transpose": "pg"}.get(op)
+        if required is not None and required not in opkw:
+            raise ValueError(
+                f"pipelined({op!r}) requires the {required}= operand")
+        self._check_axis(axis)
+        size = x.shape[split_axis]
+        nbytes = _payload_bytes(x)
+        if nchunks == "auto":
+            nchunks = self.pipeline_chunks(op, nbytes=nbytes, axis=axis,
+                                           schedule=schedule,
+                                           callsite=callsite)
+        # resolve the schedule ONCE at the full payload: a per-strip
+        # resolution could cross a cost-model / tuning-table band boundary
+        # and run a different schedule than the one the chunk count was
+        # priced for (and than callers record as provenance)
+        resolved = self.schedule_for(op, schedule, nbytes=nbytes, axis=axis,
+                                     callsite=callsite)
+        s = max(min(int(nchunks), size), 1)
+        base, extra = divmod(size, s)
+        outs, start = [], 0
+        for i in range(s):
+            stop = start + base + (1 if i < extra else 0)
+            strip = lax.slice_in_dim(x, start, stop, axis=split_axis)
+            if op == "bcast":
+                out = self.bcast(strip, axis, opkw["src"], schedule=resolved,
+                                 callsite=callsite)
+            elif op == "allreduce":
+                out = self.allreduce(strip, axis, schedule=resolved,
+                                     callsite=callsite)
+            else:
+                out = self.grid_transpose(strip, axis, opkw["pg"],
+                                          schedule=resolved,
+                                          callsite=callsite)
+            if consume is not None:
+                out = consume(out, start)
+            outs.append(out)
+            start = stop
+        if len(outs) == 1:
+            return outs[0]
+        cat = split_axis if concat_axis is None else concat_axis
+        return jnp.concatenate(outs, axis=cat)
 
     # -- provenance ---------------------------------------------------------
 

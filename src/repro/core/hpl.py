@@ -21,18 +21,25 @@ columns), so the trailing update needs no selects — a zeroed panel row
 contributes nothing, exactly like the paper's "blocks left/above need no
 further processing".
 
-Lookahead (paper Fig. 5/7 overlap) — ``lookahead=True`` pipelines the panel
-pipeline one iteration ahead: per iteration k, only the row/column strips
-that iteration k+1's panels read are updated first (two thin GEMMs), then
-iteration k+1's diagonal factorization and row/column broadcasts are issued,
-and only then is the bulk trailing GEMM of iteration k applied. The k+1
+Lookahead (paper Fig. 5/7 overlap) — ``lookahead=d`` (``True`` == 1) keeps
+``d`` panel pipelines in flight: per iteration k, only the row/column strips
+that iteration k+d's panels read are updated first (2d thin GEMMs applying
+the d pending in-flight updates restricted to that band — the strip-update
+schedule skips every band already covered by earlier strip passes), then
+iteration k+d's diagonal factorization and row/column broadcasts are issued,
+and only then is the bulk trailing GEMM of iteration k applied. The k+d
 broadcasts depend solely on the strips, so XLA can interleave the
-``chain``/``ring2d`` hops with the bulk update. The bulk GEMM still covers
-the full local matrix (the strip work is redundant compute, ~2b/m of the
-update FLOPs), which keeps the factorization bit-identical to eager mode:
-every matrix element takes its value from the same full-GEMM arithmetic,
-and the k+1 panels never read global row/column <= k (masked), the only
-entries whose values differ before the write-back.
+``chain``/``ring2d`` hops of up to d iterations with the bulk updates —
+covering the broadcast latency of small blocks on large tori. The bulk GEMM
+still covers the full local matrix (the strip work is redundant compute,
+~2db/m of the update FLOPs), which keeps the factorization bit-identical to
+eager mode for every d: every matrix element takes its value from the same
+full-GEMM arithmetic; the strip GEMM sequence applied to the k+d band is
+per-element identical to the same d full GEMMs restricted to the band; and
+the k+d panels never read global row/column <= k+d-1 (masked), the only
+entries whose values the pending write-backs would change. The depth can be
+resolved from the cost model (``lookahead="auto"`` in :func:`run_hpl` →
+:func:`repro.comm.autotune.choose_hpl_depth`).
 """
 from __future__ import annotations
 
@@ -101,20 +108,20 @@ def _panels(k, diag, row_panel, col_panel, *, pg: int, b: int,
 
     # 1. diagonal block (speculative on every device; selected by bcast)
     lu_local = lu_factor_block(diag, interpret=interpret)
-    lu_blk = engine.bcast(lu_local, "cols", pk)
-    lu_blk = engine.bcast(lu_blk, "rows", pk)
+    lu_blk = engine.bcast(lu_local, "cols", pk, callsite="hpl.block")
+    lu_blk = engine.bcast(lu_blk, "rows", pk, callsite="hpl.block")
 
     # 2. Top panel: U_kj = L_kk^{-1} A_kj on grid row pk, cols j > k
     u_panel = trsm_lower_left(lu_blk, row_panel, interpret=interpret)
     colmask = jnp.repeat(lj_global > k, b)  # (m,)
     u_panel = u_panel * colmask[None, :]
-    u_panel = engine.bcast(u_panel, "rows", pk)
+    u_panel = engine.bcast(u_panel, "rows", pk, callsite="hpl.panel")
 
     # 3. Left panel: L_ik = A_ik U_kk^{-1} on grid col pk, rows i > k
     l_panel = trsm_upper_right(lu_blk, col_panel, interpret=interpret)
     rowmask = jnp.repeat(li_global > k, b)
     l_panel = l_panel * rowmask[:, None]
-    l_panel = engine.bcast(l_panel, "cols", pk)
+    l_panel = engine.bcast(l_panel, "cols", pk, callsite="hpl.panel")
     return lu_blk, u_panel, l_panel
 
 
@@ -164,70 +171,108 @@ def _iteration(k, a, *, pg: int, b: int, lb: int, engine: CollectiveEngine,
                              li_global=li_global, lj_global=lj_global)
 
 
-def _iteration_lookahead(k, carry, *, pg: int, nb: int, b: int, lb: int,
-                         engine: CollectiveEngine, interpret, r, c,
-                         li_global, lj_global):
-    """Lookahead iteration (paper Fig. 5/7): the carry holds iteration k's
-    already-broadcast panels. Update only the strips iteration k+1 reads,
-    issue k+1's factorization + broadcasts, THEN apply the bulk trailing
-    GEMM — the broadcast hops depend only on the thin strip GEMMs, so XLA is
-    free to overlap them with the bulk update.
-
-    Bit-identity with eager mode: the bulk GEMM below still covers the full
-    local matrix, so every element of ``a`` takes its value from exactly the
-    eager arithmetic; the strip GEMMs are per-element identical to the full
-    GEMM restricted to the strip (single k-block of b <= bk columns —
-    asserted by tests/dist/test_overlap.py); and the k+1 panels never read
-    global row/column <= k (masked multiplicatively), the only entries the
-    pending write-back of iteration k would change."""
-    a, lu_blk, u_panel, l_panel = carry
+def _strip_panels(kidx, a, flight, *, pg: int, b: int, lb: int,
+                  engine: CollectiveEngine, interpret, li_global, lj_global):
+    """Form + broadcast iteration ``kidx``'s panels from thin strips of
+    ``a``, first applying every pending in-flight update (the panel sets in
+    ``flight``, oldest first) *restricted to the band* ``kidx`` reads — 2
+    thin GEMMs per pending set. Bands of earlier in-flight iterations were
+    strip-updated when their own panels were formed, so only this band's
+    updates are (re)applied here — the strip-update schedule never revisits
+    an already-updated band. ``kidx`` may be traced."""
     m = lb * b
-    # iteration k+1's local panel index, clamped on the final iteration —
-    # the speculative panels computed there are discarded with the carry
-    kn = jnp.minimum(k + 1, nb - 1)
-    lkn = kn // pg
+    lk = kidx // pg
+    row_strip = lax.dynamic_slice(a, (lk * b, 0), (b, m))
+    col_strip = lax.dynamic_slice(a, (0, lk * b), (m, b))
+    for lu_blk, u_panel, l_panel in flight:
+        l_rows = lax.dynamic_slice(l_panel, (lk * b, 0), (b, b))
+        row_strip = gemm_update(row_strip, l_rows, u_panel, alpha=-1.0,
+                                interpret=interpret)
+        u_cols = lax.dynamic_slice(u_panel, (0, lk * b), (b, b))
+        col_strip = gemm_update(col_strip, l_panel, u_cols, alpha=-1.0,
+                                interpret=interpret)
+    diag = lax.dynamic_slice(col_strip, (lk * b, 0), (b, b))
+    return _panels(kidx, diag, row_strip, col_strip, pg=pg, b=b,
+                   engine=engine, interpret=interpret, li_global=li_global,
+                   lj_global=lj_global)
 
-    # 1. thin strip updates: just the row/column band feeding k+1's panels
-    row_strip = lax.dynamic_slice(a, (lkn * b, 0), (b, m))
-    l_rows = lax.dynamic_slice(l_panel, (lkn * b, 0), (b, b))
-    row_strip = gemm_update(row_strip, l_rows, u_panel, alpha=-1.0,
-                            interpret=interpret)
-    col_strip = lax.dynamic_slice(a, (0, lkn * b), (m, b))
-    u_cols = lax.dynamic_slice(u_panel, (0, lkn * b), (b, b))
-    col_strip = gemm_update(col_strip, l_panel, u_cols, alpha=-1.0,
-                            interpret=interpret)
-    diag = lax.dynamic_slice(col_strip, (lkn * b, 0), (b, b))
 
-    # 2. issue iteration k+1's factorization and row/column broadcasts now
-    nxt = _panels(kn, diag, row_strip, col_strip, pg=pg, b=b, engine=engine,
-                  interpret=interpret, li_global=li_global,
-                  lj_global=lj_global)
+def _iteration_lookahead(k, carry, *, pg: int, nb: int, b: int, lb: int,
+                         depth: int, engine: CollectiveEngine, interpret,
+                         r, c, li_global, lj_global):
+    """Depth-d lookahead iteration (paper Fig. 5/7): the carry holds the
+    ``depth`` in-flight panel sets for iterations k..k+d-1, already
+    broadcast. Update only the strips iteration k+d reads (applying the d
+    pending updates restricted to that band), issue k+d's factorization +
+    broadcasts, THEN apply iteration k's bulk trailing GEMM — the broadcast
+    hops depend only on the thin strip GEMMs, so XLA is free to overlap up
+    to d iterations' broadcasts with the bulk updates.
+
+    Bit-identity with eager mode, for every d: the bulk GEMM below still
+    covers the full local matrix, so every element of ``a`` takes its value
+    from exactly the eager arithmetic; the strip GEMM sequence is
+    per-element identical to the same full GEMMs restricted to the strip
+    (single k-block of b <= bk columns — asserted by
+    tests/dist/test_overlap.py); and the k+d panels never read global
+    row/column <= k+d-1 (masked multiplicatively), the only entries the
+    pending write-backs would change."""
+    a = carry[0]
+    flight = tuple(carry[1:])  # depth triples (lu_blk, u_panel, l_panel)
+    # iteration k+d's index, clamped near the end — the speculative panels
+    # computed there are discarded with the carry
+    kd = jnp.minimum(k + depth, nb - 1)
+
+    # 1.-2. thin strip updates for the k+d band, then issue k+d's
+    # factorization and row/column broadcasts now
+    nxt = _strip_panels(kd, a, flight, pg=pg, b=b, lb=lb, engine=engine,
+                        interpret=interpret, li_global=li_global,
+                        lj_global=lj_global)
 
     # 3. bulk trailing update + write back iteration k's factored panels
-    a = _update_writeback(k, a, lu_blk, u_panel, l_panel, pg=pg, b=b, lb=lb,
+    # (the oldest in-flight set)
+    a = _update_writeback(k, a, *flight[0], pg=pg, b=b, lb=lb,
                           interpret=interpret, r=r, c=c,
                           li_global=li_global, lj_global=lj_global)
-    return (a,) + nxt
+    return (a,) + flight[1:] + (nxt,)
+
+
+def lookahead_depth(lookahead) -> int:
+    """Normalize a ``lookahead`` argument to a pipeline depth: False/0 ->
+    eager, True -> 1, an int d -> d. Negative depths fail fast here instead
+    of as an opaque IndexError inside the factorization loop."""
+    if lookahead is True:
+        return 1
+    if lookahead is False or lookahead is None:
+        return 0
+    depth = int(lookahead)
+    if depth < 0:
+        raise ValueError(f"lookahead depth must be >= 0, got {lookahead!r}")
+    return depth
 
 
 def _hpl_body(a_loc, *, pg: int, nb: int, b: int, engine: CollectiveEngine,
-              interpret: bool, lookahead: bool = False):
+              interpret: bool, lookahead=False):
     a = a_loc[0]
     lb = nb // pg
     r = lax.axis_index("rows")
     c = lax.axis_index("cols")
     li_global = jnp.arange(lb) * pg + r
     lj_global = jnp.arange(lb) * pg + c
-    common = dict(pg=pg, b=b, lb=lb, engine=engine, interpret=interpret,
-                  r=r, c=c, li_global=li_global, lj_global=lj_global)
+    strip_kw = dict(pg=pg, b=b, lb=lb, engine=engine, interpret=interpret,
+                    li_global=li_global, lj_global=lj_global)
+    common = dict(r=r, c=c, **strip_kw)
+    # no point carrying more panel sets than there are iterations
+    depth = min(lookahead_depth(lookahead), nb)
 
-    if lookahead:
-        # prologue: iteration 0's panels from the untouched matrix
-        first = _panels(0, a[:b, :b], a[:b, :], a[:, :b], pg=pg, b=b,
-                        engine=engine, interpret=interpret,
-                        li_global=li_global, lj_global=lj_global)
-        step = partial(_iteration_lookahead, nb=nb, **common)
-        a = lax.fori_loop(0, nb, step, (a,) + first)[0]
+    if depth:
+        # prologue: fill the flight with iterations 0..d-1's panels, each
+        # formed from strips carrying the pending earlier in-flight updates
+        flight = []
+        for j in range(depth):
+            flight.append(_strip_panels(min(j, nb - 1), a, flight,
+                                        **strip_kw))
+        step = partial(_iteration_lookahead, nb=nb, depth=depth, **common)
+        a = lax.fori_loop(0, nb, step, (a,) + tuple(flight))[0]
     else:
         step = partial(_iteration, **common)
         a = lax.fori_loop(0, nb, step, a)
@@ -235,9 +280,11 @@ def _hpl_body(a_loc, *, pg: int, nb: int, b: int, engine: CollectiveEngine,
 
 
 def make_factorize(mesh, *, pg: int, nb: int, b: int,
-                   comm=CommunicationType.ICI_DIRECT, schedule: str = "chain",
-                   interpret: bool = True, lookahead: bool = False,
+                   comm=CommunicationType.ICI_DIRECT, schedule: str = "auto",
+                   interpret: bool = True, lookahead=False,
                    engine: CollectiveEngine = None):
+    """``lookahead`` is a pipeline depth: False/0 eager, True/1 one panel
+    set in flight, d >= 2 the depth-d pipeline."""
     engine = engine or CollectiveEngine.for_mesh(mesh, comm, schedule,
                                                  interpret=interpret)
     spec = P(("rows", "cols"), None, None)
@@ -250,13 +297,16 @@ def make_factorize(mesh, *, pg: int, nb: int, b: int,
 
 @register("hpl")
 def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
-            b: int = 64, schedule: str = "chain", reps: int = 2,
+            b: int = 64, schedule: str = "auto", reps: int = 2,
             interpret: bool = True, validate: bool = True,
-            lookahead: bool = False) -> BenchResult:
+            lookahead=False) -> BenchResult:
     """mesh axes ('rows', 'cols'), P = Q (paper's quadratic torus).
 
-    ``lookahead=True`` runs the overlapped factorization (paper Fig. 5/7);
-    the LU output is bit-identical to eager mode under every bcast schedule.
+    ``lookahead`` runs the overlapped factorization (paper Fig. 5/7):
+    ``True``/1 keeps one panel set in flight, an int d >= 2 the depth-d
+    pipeline, ``"auto"`` resolves the depth from the cost model
+    (:func:`repro.comm.autotune.choose_hpl_depth`). The LU output is
+    bit-identical to eager mode under every bcast schedule at every depth.
     """
     pg = mesh.shape["rows"]
     assert mesh.shape["cols"] == pg, "paper requires a quadratic torus"
@@ -265,12 +315,25 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
     engine = CollectiveEngine.for_mesh(mesh, comm, schedule,
                                        interpret=interpret)
 
+    m = (nb // pg) * b
+    if lookahead == "auto":
+        from repro.comm.autotune import choose_hpl_depth
+        topo = engine.topology
+        lookahead = choose_hpl_depth(
+            b=b, m=m, axes=(topo.axis("rows"), topo.axis("cols")),
+            model=engine.cost_model,
+            # price the broadcasts on what THIS engine actually runs
+            # (engine-wide overrides, HOST_STAGED forcing staged)
+            resolve=lambda op, nbytes, ax, callsite: engine.schedule_for(
+                op, nbytes=nbytes, axis=ax.name, callsite=callsite))
+    depth = min(lookahead_depth(lookahead), nb)
+
     a, x_true, b_vec = generate_system(n)
     spec = NamedSharding(mesh, P(("rows", "cols"), None, None))
     a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
 
     fact = make_factorize(mesh, pg=pg, nb=nb, b=b, engine=engine,
-                          interpret=interpret, lookahead=lookahead)
+                          interpret=interpret, lookahead=depth)
     out, t = timeit(fact, a_sh, reps=reps)
 
     err = 0.0
@@ -279,15 +342,24 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
         x = solve_from_lu(lu, b_vec)
         err = normalized_residual(a, x, b_vec)
 
-    # resolved provenance: the *name the cost model picked* for the dominant
-    # payload (the b x m row/column panels), never the literal "auto"
-    panel_bytes = b * (nb // pg) * b * 4
-    resolved = engine.schedule_for("bcast", nbytes=panel_bytes, axis="rows")
+    # resolved provenance: the *names the cost model picked* for both bcast
+    # payloads — the b x b diagonal block and the dominant b x m row/column
+    # panels — never the literal "auto"
+    block_bytes = b * b * 4
+    panel_bytes = b * m * 4
+    resolved_block = engine.schedule_for("bcast", nbytes=block_bytes,
+                                         axis="rows", callsite="hpl.block")
+    resolved = engine.schedule_for("bcast", nbytes=panel_bytes, axis="rows",
+                                   callsite="hpl.panel")
     return BenchResult(
         name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
         error=err, times={"best": t},
         details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
                  "schedule": resolved,
+                 "schedule_block": resolved_block,
+                 "schedule_panel": resolved,
                  "schedule_requested": engine.schedule,
                  "bcast_bytes": panel_bytes,
-                 "lookahead": lookahead})
+                 "block_bytes": block_bytes,
+                 "lookahead": depth > 0,
+                 "lookahead_depth": depth})

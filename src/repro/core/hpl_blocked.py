@@ -1,9 +1,21 @@
-"""Single-device blocked right-looking LU (paper Fig. 13's per-FPGA sweep).
+"""Single-device blocked LU (paper Fig. 13's per-FPGA sweep).
 
-Same kernels as the distributed HPL, no communication: used for the
-matrix-size performance sweep, for unit tests, and as the measured
-single-device curve that feeds the strong-scaling extrapolation model
-(paper Fig. 15)."""
+Folded into a thin wrapper over the distributed factorization
+(:mod:`repro.core.hpl`) on a 1 x 1 grid: one code path owns the blocked
+right-looking algorithm, and the single-device sweep exercises exactly the
+kernels and iteration structure the torus runs (all collective schedules
+degenerate to identity on 1-rank axes). Used for the matrix-size
+performance sweep, for unit tests, and as the measured single-device curve
+that feeds the strong-scaling extrapolation model (paper Fig. 15).
+
+Note the fold changes the *measured compute profile*: the distributed
+trailing update is a masked full-matrix GEMM every iteration (the
+block-cyclic layout interleaves the trailing submatrix, so slicing it out
+is impossible for pg > 1 and the 1 x 1 grid inherits that), ~3x the
+shrinking-submatrix FLOPs of the old standalone loop. Reported GFLOP/s
+(still normalized by ``hpl_flops(n)``) drops accordingly versus pre-fold
+artifacts, and the Fig. 15 curve is consistent with how the *distributed*
+per-device work actually scales — which is what the extrapolation predicts."""
 from __future__ import annotations
 
 from functools import partial
@@ -12,35 +24,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core.hpcc import BenchResult, register, timeit
-from repro.core.hpl import generate_system, normalized_residual, solve_from_lu
+from repro.core.hpl import (generate_system, make_factorize,
+                            normalized_residual, solve_from_lu)
 from repro.core.models import hpl_flops
-from repro.kernels.ops import (gemm_update, lu_factor_block,
-                               trsm_lower_left, trsm_upper_right)
 
 
 def lu_blocked(a: jnp.ndarray, b: int, *, interpret: bool = True) -> jnp.ndarray:
-    """In-place style blocked LU of (n, n) ``a`` with block size ``b``;
-    returns packed L\\U. Python loop over diagonal blocks (static unroll)."""
+    """Blocked LU of (n, n) ``a`` with block size ``b``; returns packed
+    L\\U. Thin wrapper: the distributed right-looking factorization on a
+    1 x 1 grid (every broadcast is an identity, the trailing update's
+    row/column masks reproduce the shrinking-submatrix sweep)."""
     n = a.shape[0]
-    nb = n // b
-    for k in range(nb):
-        o = k * b
-        lu = lu_factor_block(jax.lax.dynamic_slice(a, (o, o), (b, b)),
-                             interpret=interpret)
-        a = jax.lax.dynamic_update_slice(a, lu, (o, o))
-        rest = n - o - b
-        if rest:
-            row = jax.lax.dynamic_slice(a, (o, o + b), (b, rest))
-            u = trsm_lower_left(lu, row, interpret=interpret)
-            a = jax.lax.dynamic_update_slice(a, u, (o, o + b))
-            col = jax.lax.dynamic_slice(a, (o + b, o), (rest, b))
-            l = trsm_upper_right(lu, col, interpret=interpret)
-            a = jax.lax.dynamic_update_slice(a, l, (o + b, o))
-            trail = jax.lax.dynamic_slice(a, (o + b, o + b), (rest, rest))
-            trail = gemm_update(trail, l, u, alpha=-1.0, interpret=interpret)
-            a = jax.lax.dynamic_update_slice(a, trail, (o + b, o + b))
-    return a
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    fact = make_factorize(mesh, pg=1, nb=n // b, b=b, interpret=interpret)
+    return fact(a[None])[0]
 
 
 @register("hpl_single")

@@ -21,6 +21,16 @@ The exchange routes through the :class:`~repro.comm.engine.CollectiveEngine`
 * ``staged`` (forced by HOST_STAGED) — all_gather over the full grid + local
   selection: every block transits the staging domain (paper §2.2.1 via
   PCIe+MPI).
+
+Chunked (pipelined) exchange: ``run_ptrans(..., nchunks=S)`` splits the
+local matrix into S row strips routed through
+:meth:`~repro.comm.engine.CollectiveEngine.pipelined`, so the
+``transpose_add`` of strip i overlaps the wire hops of strip i+1 — the
+in-flight chunk pipeline the circuit-switched results rely on.
+``nchunks="auto"`` (default) resolves S from the alpha-beta fill-cost model
+(:func:`repro.comm.autotune.best_nchunks`); the result is bit-identical to
+the monolithic exchange for every S (chunk boundaries only partition the
+payload, and the transpose-add is elementwise).
 """
 from __future__ import annotations
 
@@ -29,6 +39,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.engine import CollectiveEngine
@@ -80,18 +91,38 @@ def undistribute_cyclic(shards: np.ndarray, pg: int, b: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+CALLSITE = "ptrans.exchange"  # tuning-table tag for the partner exchange
+
+
 def _ptrans_body(a_loc, b_loc, *, pg: int, engine: CollectiveEngine,
-                 interpret: bool):
+                 interpret: bool, nchunks: int = 1):
     a_loc, b_loc = a_loc[0], b_loc[0]
-    recv = engine.grid_transpose(a_loc, ("rows", "cols"), pg)
-    out = transpose_add(recv, b_loc, interpret=interpret)
+    if nchunks <= 1:
+        recv = engine.grid_transpose(a_loc, ("rows", "cols"), pg,
+                                     callsite=CALLSITE)
+        out = transpose_add(recv, b_loc, interpret=interpret)
+        return out[None]
+
+    # strip-wise pipeline: row strip i of A lands, its transpose-add writes
+    # column strip i of C while strip i+1 is still on the wire
+    def consume(strip, start):
+        b_cols = lax.slice_in_dim(b_loc, start, start + strip.shape[0],
+                                  axis=1)
+        return transpose_add(strip, b_cols, interpret=interpret)
+
+    out = engine.pipelined("grid_transpose", a_loc, ("rows", "cols"),
+                           pg=pg, nchunks=nchunks, split_axis=0,
+                           concat_axis=1, consume=consume,
+                           callsite=CALLSITE)
     return out[None]
 
 
-def make_step(mesh, pg: int, engine: CollectiveEngine, interpret: bool = True):
+def make_step(mesh, pg: int, engine: CollectiveEngine, interpret: bool = True,
+              nchunks: int = 1):
     spec = P(("rows", "cols"), None, None)
     fn = shard_map(
-        partial(_ptrans_body, pg=pg, engine=engine, interpret=interpret),
+        partial(_ptrans_body, pg=pg, engine=engine, interpret=interpret,
+                nchunks=nchunks),
         mesh=mesh, in_specs=(spec, spec), out_specs=spec, check_vma=False)
     return jax.jit(fn)
 
@@ -99,8 +130,13 @@ def make_step(mesh, pg: int, engine: CollectiveEngine, interpret: bool = True):
 @register("ptrans")
 def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
                b: int = 128, reps: int = 3, interpret: bool = True,
-               validate: bool = True, schedule: str = "auto") -> BenchResult:
-    """mesh must have axes ('rows', 'cols') with equal sizes (P = Q)."""
+               validate: bool = True, schedule: str = "auto",
+               nchunks="auto") -> BenchResult:
+    """mesh must have axes ('rows', 'cols') with equal sizes (P = Q).
+
+    ``nchunks`` pipelines the exchange into that many row strips (1 =
+    monolithic); ``"auto"`` resolves the chunk count from the alpha-beta
+    fill-cost model. Bit-identical output for every value."""
     pg = mesh.shape["rows"]
     assert mesh.shape["cols"] == pg, "paper requires P = Q"
     engine = CollectiveEngine.for_mesh(mesh, comm, schedule,
@@ -109,11 +145,20 @@ def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
     a = rng.standard_normal((n, n), dtype=np.float32)
     bm = rng.standard_normal((n, n), dtype=np.float32)
 
+    local_bytes = (n // pg) * (n // pg) * 4
+    nchunks_requested = nchunks
+    if nchunks == "auto":
+        nchunks = engine.pipeline_chunks("grid_transpose",
+                                         nbytes=local_bytes,
+                                         axis=("rows", "cols"),
+                                         callsite=CALLSITE)
+    nchunks = max(int(nchunks), 1)
+
     spec = NamedSharding(mesh, P(("rows", "cols"), None, None))
     a_sh = jax.device_put(distribute_cyclic(a, pg, b), spec)
     b_sh = jax.device_put(distribute_cyclic(bm, pg, b), spec)
 
-    step = make_step(mesh, pg, engine, interpret)
+    step = make_step(mesh, pg, engine, interpret, nchunks=nchunks)
     out, t = timeit(step, a_sh, b_sh, reps=reps)
 
     err = 0.0
@@ -125,14 +170,15 @@ def run_ptrans(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 1024,
     flops = float(n) * n  # paper: n^2 additions
     # resolved provenance: the cost model's pick for the actual per-device
     # exchange payload (the packed local matrix), never the literal "auto"
-    local_bytes = (n // pg) * (n // pg) * 4
     resolved = engine.schedule_for("grid_transpose", nbytes=local_bytes,
-                                   axis=("rows", "cols"))
+                                   axis=("rows", "cols"), callsite=CALLSITE)
     return BenchResult(
         name="ptrans", metric_name="GFLOP/s", metric=flops / t / 1e9,
         error=err, times={"best": t},
         details={"n": n, "block": b, "grid": pg, "comm": engine.comm.value,
                  "schedule": resolved,
                  "schedule_requested": engine.schedule,
+                 "nchunks": nchunks,
+                 "nchunks_requested": nchunks_requested,
                  "exchange_bytes": local_bytes,
                  "bytes_exchanged": float(n) * n * 4})

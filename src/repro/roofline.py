@@ -466,6 +466,33 @@ def alpha_beta_time(hops: float, wire_bytes: float,
     return hops * hw.ici_latency + wire_bytes / hw.ici_link_bw
 
 
+def pipelined_alpha_beta_time(hops: float, wire_bytes: float, nchunks: int,
+                              hw: HardwareModel = TPU_V5E, *,
+                              staged: bool = False) -> float:
+    """Alpha-beta term for a software-pipelined collective.
+
+    The payload is split into ``nchunks`` chunks that stream through the
+    ``hops``-stage pipe, so the transfer takes ``hops + nchunks - 1`` stages
+    of one per-chunk hop each::
+
+        T(S) = (H + S - 1) x (alpha + W / (H * S * beta))
+
+    ``S = 1`` reduces exactly to :func:`alpha_beta_time`. More chunks shrink
+    the per-stage wire term (better overlap with the consumer's compute) but
+    add ``S - 1`` stages of fill/drain latency — the trade
+    :func:`repro.comm.autotune.best_nchunks` optimizes.
+    """
+    h = float(hops)
+    if h < 1.0:
+        # nothing to pipeline (1-rank axis / degenerate segment): keep the
+        # S=1 == monolithic contract exact instead of clamping to one hop
+        return alpha_beta_time(hops, wire_bytes, hw, staged=staged)
+    s = max(int(nchunks), 1)
+    alpha = hw.mpi_latency if staged else hw.ici_latency
+    beta = min(hw.pcie_bw, hw.dcn_bw) if staged else hw.ici_link_bw
+    return (h + s - 1) * (alpha + wire_bytes / (h * s) / beta)
+
+
 @dataclass
 class Roofline:
     flops: float                 # per-device HLO flops (parsed, loop-expanded)

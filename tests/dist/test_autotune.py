@@ -93,6 +93,47 @@ def test_auto_bcast_bit_equal_to_fixed(ring, elems):
         np.testing.assert_array_equal(auto, fixed, err_msg=schedule)
 
 
+def test_int8_ef_in_ring_error_feedback_bound(ring):
+    """Lossy-bound pin for the residual-carrying int8_ef wire: with the
+    per-hop requantization residual travelling alongside the payload, the
+    end-to-end error is O(hops/127^2) of the input magnitude — ~1/127 of
+    the residual-free wire's O(hops/127) bound — and the cost model prices
+    the doubled int8 payload accordingly (INT8_WIRE_RATIO ~ 0.5)."""
+    from repro.comm.autotune import INT8_WIRE_RATIO
+    assert 0.5 <= INT8_WIRE_RATIO < 0.52  # 2 x (1/4 + 1/256) of f32 bytes
+    rng = np.random.default_rng(12)
+    x = rng.uniform(-50.0, 50.0, (NDEV, 2048)).astype(np.float32)
+    eng = CollectiveEngine.for_mesh(ring, schedule="int8_ef")
+    spec = P("x", None)
+    fn = jax.jit(shard_map(lambda v: eng.allreduce(v[0], "x")[None],
+                           mesh=ring, in_specs=(spec,), out_specs=spec,
+                           check_vma=False))
+    out = np.asarray(fn(jnp.asarray(x)))
+    err = np.max(np.abs(out - x.sum(0, dtype=np.float64)))
+    assert err <= 2.0 / 127.0 ** 2 * NDEV * np.max(np.abs(x)), err
+
+
+def test_auto_pipelined_grid_transpose_bit_equal(torus):
+    """engine.pipelined with nchunks="auto" (cost-model chunk count, per-
+    callsite tag) == the monolithic exchange, bitwise."""
+    x = _ints((4, 16, 16), seed=7)
+    spec = P(("rows", "cols"), None, None)
+    eng = _auto_engine(torus)
+
+    def run(pipelined):
+        def body(v):
+            if pipelined:
+                return eng.pipelined("grid_transpose", v[0],
+                                     ("rows", "cols"), pg=2, nchunks="auto",
+                                     callsite="ptrans.exchange")[None]
+            return eng.grid_transpose(v[0], ("rows", "cols"), 2)[None]
+        fn = jax.jit(shard_map(body, mesh=torus, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        return np.asarray(fn(jnp.asarray(x)))
+
+    np.testing.assert_array_equal(run(True), run(False))
+
+
 def test_auto_grid_transpose_bit_equal_to_fixed(torus):
     x = _ints((4, 16, 16), seed=3)
     spec = P(("rows", "cols"), None, None)
@@ -137,6 +178,35 @@ def test_auto_allreduce_tree_with_derived_bucket(ring):
 # ---------------------------------------------------------------------------
 # measured mode on the live mesh
 # ---------------------------------------------------------------------------
+
+
+def test_measured_callsite_entry_round_trip(tmp_path):
+    """The paired-bcast callsite pattern measures under its tagged key and
+    a model with that table resolves the matching callsite through it,
+    while untagged lookups fall back to the analytic ranking."""
+    from repro.comm.topology import AxisTopology
+    table, record = autotune_mesh(ops=("bcast@hpl.panel",),
+                                  sizes=(1024,), reps=1, verbose=False)
+    sig = "torus_row[2]"
+    assert sig in table.entries.get("bcast@hpl.panel", {})
+    rows = table.entries["bcast@hpl.panel"][sig]
+    for _, name in rows:
+        assert name in schedules_for("bcast")
+    assert record
+    # the HPL pattern is row/column-symmetric: the winner must also land
+    # under the column-axis signature so the l_panel bcast matches it
+    assert table.entries["bcast@hpl.panel"].get("torus_col[2]") == rows
+
+    loaded = TuningTable.load(table.save(tmp_path / "tuning.json"))
+    axes = (AxisTopology("rows", 2, "torus_row"),)
+    m = CostModel(table=loaded)
+    assert m.choose("bcast", 1024, axes, callsite="hpl.panel") == rows[0][1]
+    col_axes = (AxisTopology("cols", 2, "torus_col"),)
+    assert m.choose("bcast", 1024, col_axes, callsite="hpl.panel") \
+        == rows[0][1]
+    # no callsite -> no tagged entry consulted -> analytic pick
+    assert m.choose("bcast", 1024, axes) \
+        == CostModel(table=None).choose("bcast", 1024, axes)
 
 
 def test_measured_autotune_round_trip(tmp_path):

@@ -19,8 +19,11 @@ import sys
 import pytest
 
 from repro.comm.autotune import (LOSSY_SCHEDULES, MAX_BUCKET_BYTES,
+                                 MAX_LOOKAHEAD_DEPTH, MAX_PIPELINE_CHUNKS,
                                  MIN_BUCKET_BYTES, CostModel, TuningTable,
-                                 axis_signature, derive_bucket_bytes)
+                                 axis_signature, best_nchunks,
+                                 choose_hpl_depth, derive_bucket_bytes,
+                                 pipelined_cost, segments)
 from repro.comm.engine import CollectiveEngine, schedules_for
 from repro.comm.topology import AxisTopology, MeshTopology
 from repro.comm.types import TPU_V5E
@@ -79,6 +82,98 @@ def test_unpriced_schedule_is_infinite_and_never_chosen():
     assert m.cost("allreduce", "no_such_schedule", MiB, RING8) == float("inf")
     names = [n for n, _ in m.rank("allreduce", MiB, RING8)]
     assert "no_such_schedule" not in names
+
+
+# ---------------------------------------------------------------------------
+# pipelined pricing (fill cost vs per-chunk latency)
+# ---------------------------------------------------------------------------
+
+_PIPE_CASES = [
+    ("bcast", "chain", RING8), ("bcast", "native", RING8),
+    ("bcast", "ring2d", RING8), ("allreduce", "rs_ag", RING8),
+    ("allreduce", "staged", RING8),
+    ("grid_transpose", "direct", TORUS22),
+    ("grid_transpose", "ring2d", TORUS22),
+]
+
+
+@pytest.mark.parametrize("op,schedule,axes", _PIPE_CASES)
+def test_pipelined_cost_with_one_chunk_is_monolithic(op, schedule, axes):
+    m = analytic()
+    for size in (KiB, MiB, 64 * MiB):
+        assert pipelined_cost(op, schedule, size, axes, 1) == \
+            pytest.approx(m.cost(op, schedule, size, axes), rel=1e-12)
+
+
+def test_pipelined_cost_unpriced_is_infinite():
+    assert pipelined_cost("allreduce", "no_such", MiB, RING8, 4) \
+        == float("inf")
+    assert best_nchunks("allreduce", "no_such", MiB, RING8) == \
+        (1, float("inf"))
+
+
+def test_segments_decomposition_matches_cost():
+    from repro.comm.types import TPU_V5E
+    from repro.roofline import alpha_beta_time
+    m = analytic()
+    segs = segments("grid_transpose", "ring2d", MiB, TORUS22)
+    assert len(segs) == 2  # row phase + column relay phase
+    total = sum(alpha_beta_time(h, w, TPU_V5E, staged=k == "staged")
+                for h, w, k in segs if k != "sync")
+    assert total == pytest.approx(
+        m.cost("grid_transpose", "ring2d", MiB, TORUS22))
+
+
+def test_best_nchunks_regimes():
+    """Tiny payloads stay monolithic (fill cost dominates); large payloads
+    chunk deeper; the chunk count never exceeds the ceiling and the chosen
+    pipeline is never costlier than monolithic."""
+    s_small, c_small = best_nchunks("grid_transpose", "direct", KiB, TORUS22)
+    assert s_small == 1
+    s_mid, c_mid = best_nchunks("grid_transpose", "direct", 256 * KiB,
+                                TORUS22)
+    s_big, c_big = best_nchunks("grid_transpose", "direct", 16 * MiB,
+                                TORUS22)
+    assert 1 < s_mid <= s_big <= MAX_PIPELINE_CHUNKS
+    for (s, c), size in (((s_mid, c_mid), 256 * KiB),
+                         ((s_big, c_big), 16 * MiB)):
+        assert c <= pipelined_cost("grid_transpose", "direct", size,
+                                   TORUS22, 1)
+    # sync-heavy native schedules chunk reluctantly: every chunk re-pays the
+    # dispatch surcharge
+    s_native, _ = best_nchunks("bcast", "native", 256 * KiB, RING8)
+    s_chain, _ = best_nchunks("bcast", "chain", 256 * KiB, RING8)
+    assert s_native <= s_chain
+
+
+def test_choose_hpl_depth_regimes():
+    """Latency-bound small blocks on a torus go deep; compute-bound large
+    local matrices stay at depth 1; the ceiling holds."""
+    m = analytic()
+    deep = choose_hpl_depth(b=64, m=1024, axes=TORUS22, model=m)
+    shallow = choose_hpl_depth(b=256, m=65536, axes=TORUS22, model=m)
+    assert deep == MAX_LOOKAHEAD_DEPTH
+    assert shallow == 1
+    for b, mm in ((32, 512), (128, 4096), (256, 1 << 17)):
+        assert 1 <= choose_hpl_depth(b=b, m=mm, axes=TORUS22, model=m) \
+            <= MAX_LOOKAHEAD_DEPTH
+
+
+def test_choose_hpl_depth_prices_resolved_schedule():
+    """A resolve hook naming the schedule the engine actually runs changes
+    the depth: forcing the costly staged broadcasts on a config the analytic
+    model calls compute-bound pushes t_comm up and the depth deeper — the
+    HOST_STAGED / explicit-override case."""
+    m = analytic()
+    assert choose_hpl_depth(b=256, m=65536, axes=TORUS22, model=m) == 1
+    forced = choose_hpl_depth(b=256, m=65536, axes=TORUS22, model=m,
+                              resolve=lambda op, nbytes, ax, cs: "staged")
+    assert forced > 1
+    # an unpriceable schedule (no cost formula -> inf) clamps to the
+    # ceiling instead of overflowing on ceil(inf)
+    unpriced = choose_hpl_depth(b=256, m=65536, axes=TORUS22, model=m,
+                                resolve=lambda op, nbytes, ax, cs: "custom")
+    assert unpriced == MAX_LOOKAHEAD_DEPTH
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +309,38 @@ def test_tuning_table_band_boundaries():
     assert t.lookup("grid_transpose", sig, KiB) is None         # unknown op
 
 
+def test_tuning_table_callsite_keys():
+    """op@callsite entries override the untagged op for the matching
+    callsite only; unknown callsites and plain lookups fall through."""
+    t = _synthetic_table()
+    sig = axis_signature(RING8)
+    t.set("bcast@hpl.panel", sig, [(None, "ring2d")])
+    assert t.lookup("bcast", sig, KiB, callsite="hpl.panel") == "ring2d"
+    assert t.lookup("bcast", sig, KiB) == "native"            # untagged
+    assert t.lookup("bcast", sig, KiB, callsite="other") == "native"
+    # tagged-only entry: a different callsite falls through to nothing
+    t2 = TuningTable()
+    t2.set("bcast@hpl.panel", sig, [(None, "ring2d")])
+    assert t2.lookup("bcast", sig, KiB, callsite="hpl.panel") == "ring2d"
+    assert t2.lookup("bcast", sig, KiB) is None
+
+    m = CostModel(table=t)
+    assert m.choose("bcast", KiB, RING8, callsite="hpl.panel") == "ring2d"
+    assert m.choose("bcast", KiB, RING8) == "native"
+    # callsite-tagged keys round-trip through json like any other op key
+    loaded = TuningTable.from_json(t.to_json())
+    assert loaded.lookup("bcast", sig, KiB, callsite="hpl.panel") == "ring2d"
+
+
+def test_callsite_stale_entry_falls_back():
+    t = TuningTable()
+    t.set("bcast@hpl.panel", axis_signature(RING8),
+          [(None, "deleted_schedule")])
+    m = CostModel(table=t)
+    choice = m.choose("bcast", KiB, RING8, callsite="hpl.panel")
+    assert choice == analytic().choose("bcast", KiB, RING8)
+
+
 def test_stale_table_entry_falls_back_to_analytic():
     t = TuningTable()
     t.set("allreduce", axis_signature(RING8), [(None, "deleted_schedule")])
@@ -342,6 +469,28 @@ def test_engine_explicit_override_beats_model():
     eng = _engine8()
     assert eng.schedule_for("allreduce", "chain",
                             nbytes=64 * MiB, axis="x") == "chain"
+
+
+def test_engine_callsite_resolution_and_pipeline_chunks():
+    """The engine threads callsite tags into table lookups, and
+    pipeline_chunks resolves the fill-cost chunk count (1 without
+    payload/topology context)."""
+    t = TuningTable()
+    t.set("bcast@hpl.panel", axis_signature(RING8), [(None, "ring2d")])
+    topo = MeshTopology(axes=RING8)
+    eng = CollectiveEngine(schedule="auto", topology=topo,
+                           cost_model=CostModel(table=t))
+    assert eng.schedule_for("bcast", nbytes=KiB, axis="x",
+                            callsite="hpl.panel") == "ring2d"
+    assert eng.schedule_for("bcast", nbytes=KiB, axis="x") == "chain"
+
+    eng2 = _engine8()
+    assert eng2.pipeline_chunks("bcast", nbytes=64 * MiB, axis="x") > 1
+    assert eng2.pipeline_chunks("bcast", nbytes=256, axis="x") == 1
+    assert eng2.pipeline_chunks("bcast", nbytes=64 * MiB, axis="bogus") == 1
+    assert eng2.pipeline_chunks("bcast") == 1
+    assert CollectiveEngine().pipeline_chunks("bcast", nbytes=64 * MiB,
+                                              axis="x") == 1
 
 
 def test_host_staged_still_forces_staged():

@@ -117,6 +117,63 @@ def test_single_rank_ops_are_identity(schedule):
     np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(x))
 
 
+def test_pipelined_rejects_unsupported_ops():
+    eng = CollectiveEngine()
+    with pytest.raises(ValueError) as exc:
+        eng.pipelined("ring_exchange", jnp.zeros((4, 4)), "x", nchunks=2)
+    assert "single-payload" in str(exc.value)
+    with pytest.raises(ValueError):
+        eng.pipelined("nonsense", jnp.zeros((4, 4)), "x", nchunks=2)
+    # missing per-op operands fail fast with a named error, not a KeyError
+    with pytest.raises(ValueError, match="src"):
+        eng.pipelined("bcast", jnp.zeros((4, 4)), "x", nchunks=2)
+    with pytest.raises(ValueError, match="pg"):
+        eng.pipelined("grid_transpose", jnp.zeros((4, 4)),
+                      ("rows", "cols"), nchunks=2)
+
+
+@pytest.mark.parametrize("nchunks", [1, 2, 3, 64, "auto"])
+def test_pipelined_single_rank_identity(nchunks):
+    """Chunked ops on a 1-rank axis reproduce the input exactly for every
+    chunk count (including nchunks > rows, clamped to one row per strip)."""
+    mesh = make_mesh((1,), ("x",))
+    eng = CollectiveEngine.for_mesh(mesh)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 12, 8)),
+                    jnp.float32)
+
+    def body(v):
+        out = eng.pipelined("allreduce", v[0], "x", nchunks=nchunks)
+        out = eng.pipelined("bcast", out, "x", src=0, nchunks=nchunks,
+                            split_axis=1)
+        return out[None]
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x", None, None),),
+                           out_specs=P("x", None, None), check_vma=False))
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(x))
+
+
+def test_pipelined_consume_and_concat_axis():
+    """consume runs per strip with its static start offset; outputs
+    concatenate along concat_axis."""
+    mesh = make_mesh((1,), ("x",))
+    eng = CollectiveEngine.for_mesh(mesh)
+    x = jnp.arange(24, dtype=jnp.float32).reshape(6, 4)
+    starts = []
+
+    def body(v):
+        def consume(strip, start):
+            starts.append(start)
+            return strip.T  # (4, rows) -> concat along axis 1
+        return eng.pipelined("bcast", v[0], "x", src=0, nchunks=3,
+                             concat_axis=1, consume=consume)[None]
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x", None, None),),
+                           out_specs=P("x", None, None), check_vma=False))
+    out = np.asarray(fn(x[None]))[0]
+    assert starts == [0, 2, 4]  # three equal strips of the 6 rows
+    np.testing.assert_array_equal(out, np.asarray(x).T)
+
+
 def test_fused_ring_step_matches_plain_add():
     from repro.kernels.ring import fused_chunk_add
     rng = np.random.default_rng(1)

@@ -28,6 +28,16 @@ def test_hpl_end_to_end_residual(n, b):
     assert normalized_residual(a, x, b_vec) < 1.0
 
 
+def test_lookahead_depth_normalization():
+    from repro.core.hpl import lookahead_depth
+    assert lookahead_depth(False) == 0
+    assert lookahead_depth(None) == 0
+    assert lookahead_depth(True) == 1
+    assert lookahead_depth(3) == 3
+    with pytest.raises(ValueError):
+        lookahead_depth(-1)
+
+
 def test_block_size_invariance():
     """The factorization must not depend on the block size."""
     n = 128
