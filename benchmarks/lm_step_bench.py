@@ -1,6 +1,13 @@
 """Beyond-paper — LM train/serve step timings (reduced configs, measured on
 CPU for regression) + the production-mesh roofline summary per assigned
-architecture (read from the dry-run results)."""
+architecture (read from the dry-run results), plus the explicit-vs-GSPMD
+MoE comparison: the qwen3-moe config's expert layer run once through the
+GSPMD path (XLA inserts the exchanges) and once through the engine-routed
+``apply_moe_explicit`` path on the simulated multi-device mesh, with the
+per-callsite resolved schedules (``moe.dispatch`` / ``moe.combine`` /
+``dp.grads``) recorded in the result — never the literal ``"auto"``. The
+module fails with SystemExit(1) if any resolution names an unregistered
+schedule (the same gate ``--autotune`` applies)."""
 from __future__ import annotations
 
 import json
@@ -22,15 +29,155 @@ from repro.train.step import init_train_state, make_train_step  # noqa: E402
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
+MOE_ARCH = "qwen3-moe-235b-a22b"
+
+
+def _moe_explicit_section(quick: bool, schedule):
+    """Explicit-vs-GSPMD MoE through the collective engine.
+
+    Runs the reduced qwen3-moe expert layer twice on the live mesh — the
+    GSPMD ``apply_moe`` with a batch-sharded input, and the engine-routed
+    ``apply_moe_explicit`` (dispatch/combine as tagged ``all_to_all_tiles``,
+    pipelined ``nchunks="auto"``) — plus one explicit-DP train step so the
+    ``dp.grads`` bucket reduction resolves against real payload sizes.
+    Returns the result record with every per-callsite resolved schedule.
+    """
+    from dataclasses import replace
+
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.comm.engine import CollectiveEngine
+    from repro.compat import make_mesh
+    from repro.core.hpcc import timeit
+    from repro.models import moe as MOE
+    from repro.train.step import GRADS_CALLSITE, make_dp_train_step_explicit
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return {"skipped": f"explicit MoE needs >= 2 devices, have {ndev}"}
+
+    requested = schedule or "auto"
+    cfg = reduced(get_config(MOE_ARCH), layers=1)
+    # experts must divide over the mesh axis for the explicit exchange
+    cfg = replace(cfg, num_experts=ndev,
+                  num_experts_per_tok=min(cfg.num_experts_per_tok, ndev),
+                  capacity_factor=2.0)
+    mesh = make_mesh((ndev,), ("x",))
+    engine = CollectiveEngine.for_mesh(mesh, schedule=requested)
+
+    B, S, D = ndev, (16 if quick else 32), cfg.d_model
+    p = MOE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (B, S, D), jnp.float32)
+
+    # GSPMD path: one jit over the batch-sharded input, XLA schedules the
+    # expert resharding itself
+    xs = jax.device_put(x, NamedSharding(mesh, P("x", None, None)))
+    gspmd = jax.jit(lambda p, x: MOE.apply_moe(p, cfg, x))
+    out_g, t_gspmd = timeit(gspmd, p, xs, reps=2)
+
+    # explicit path: engine-routed exchanges, pipelined capacity strips
+    explicit = MOE.make_apply_moe_explicit(cfg, mesh, engine=engine,
+                                           nchunks="auto")
+    out_e, t_explicit = timeit(explicit, p, x, reps=2)
+    err = float(np.max(np.abs(np.asarray(out_e, np.float32)
+                              - np.asarray(out_g, np.float32))))
+
+    # one explicit-DP step on the same config: the dp.grads bucket payload
+    data = SyntheticLMDataset(DataConfig(cfg.vocab_size, B, S))
+    batch = {"tokens": jnp.asarray(data.batch(0)["tokens"])}
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(2))
+    step = make_dp_train_step_explicit(
+        model, RunConfig(learning_rate=1e-3, warmup_steps=1), mesh,
+        schedule_kind=requested)
+    grad_bytes = 4 * sum(v.size for v in jax.tree.leaves(state.params))
+    # the step donates its state: compile with the fresh state, time the
+    # second step on the returned one
+    state2, _ = jax.block_until_ready(step(state, batch))
+    t0 = time.perf_counter()
+    _, metrics = jax.block_until_ready(step(state2, batch))
+    t_dp = time.perf_counter() - t0
+
+    # per-callsite provenance at the actual payload sizes, matching the
+    # hpl/ptrans convention: resolved names recorded, never "auto"
+    C = MOE._capacity(cfg, S)
+    exchange_bytes = (B // ndev) * cfg.num_experts * C * D * 4
+    bucket_bytes = engine.bucket_bytes_for("x")
+    # resolve dp.grads at the payloads the bucketed reduction actually runs
+    # (greedy leaf packing can leave a small trailing bucket in a different
+    # cost band than min(bucket, total) would suggest)
+    from repro.comm.overlap import pack_buckets
+    leaves = jax.tree.leaves(state.params)
+    bucket_payloads = sorted({
+        sum(leaves[i].size * 4 for i in b if leaves[i].size)
+        for b in pack_buckets(leaves, bucket_bytes)} - {0})
+    per_bucket = [engine.schedule_for("allreduce", nbytes=nb, axis="x",
+                                      callsite=GRADS_CALLSITE)
+                  for nb in bucket_payloads]
+    resolved = {
+        "moe.dispatch": engine.schedule_for(
+            "all_to_all_tiles", nbytes=exchange_bytes, axis="x",
+            callsite=MOE.DISPATCH_CALLSITE),
+        "moe.combine": engine.schedule_for(
+            "all_to_all_tiles", nbytes=exchange_bytes, axis="x",
+            callsite=MOE.COMBINE_CALLSITE),
+        # headline name: the largest bucket dominates the wire time; the
+        # full per-bucket map below captures band-crossing resolutions
+        "dp.grads": per_bucket[-1],
+    }
+    nchunks = engine.pipeline_chunks("all_to_all_tiles",
+                                     nbytes=exchange_bytes, axis="x",
+                                     callsite=MOE.DISPATCH_CALLSITE)
+    return {
+        "arch": MOE_ARCH, "devices": ndev,
+        "time": t_explicit, "t_explicit_s": t_explicit,
+        "t_gspmd_s": t_gspmd, "t_dp_step_s": t_dp,
+        "dp_loss": float(metrics["loss"]),
+        "max_abs_err_vs_gspmd": err,
+        "schedule": resolved["moe.dispatch"],
+        "schedule_requested": requested,
+        "resolved": resolved, "nchunks": nchunks,
+        "dp_grads_bucket_payloads": bucket_payloads,
+        "dp_grads_resolved_per_bucket": per_bucket,
+        "exchange_bytes": exchange_bytes, "bucket_bytes": bucket_bytes,
+        "grad_bytes": grad_bytes,
+    }
+
+
+def _gate_resolved(section) -> None:
+    """SystemExit(1) if any explicit-path resolution is unregistered or
+    still the literal "auto" — the same gate as ``--autotune``."""
+    from repro.comm.engine import schedules_for
+
+    resolved = (section or {}).get("resolved")
+    if not resolved:
+        return
+    ops = {"moe.dispatch": "all_to_all_tiles", "moe.combine": "all_to_all_tiles",
+           "dp.grads": "allreduce"}
+    checks = list(resolved.items()) + [
+        ("dp.grads", n) for n in section.get("dp_grads_resolved_per_bucket", ())]
+    bad = [(cs, name) for cs, name in checks
+           if name == "auto" or name not in schedules_for(ops[cs])]
+    if bad:
+        print("UNREGISTERED explicit-MoE resolutions:", bad)
+        raise SystemExit(1)
+
 
 def main(quick: bool = False, schedule=None):
-    # GSPMD-scheduled steps (XLA picks the collectives); ``schedule``
-    # accepted for driver uniformity
+    # GSPMD-scheduled train/decode steps (XLA picks the collectives);
+    # ``schedule`` applies to the explicit-MoE section below
     archs = (["llama3-8b", "mamba2-130m", "qwen3-moe-235b-a22b"]
              if quick else list_archs())
+    if schedule not in (None, "auto"):
+        # a fixed schedule only affects the explicit-MoE section: skip the
+        # schedule-invariant GSPMD arch timings (--sweep-schedules invokes
+        # this module once per registered all_to_all_tiles schedule)
+        archs = []
     B, S = 4, 64
 
-    print("== LM step bench (reduced configs, CPU wall-time) ==")
+    if archs:
+        print("== LM step bench (reduced configs, CPU wall-time) ==")
     rows = []
     record = {}
     for arch in archs:
@@ -70,7 +217,27 @@ def main(quick: bool = False, schedule=None):
         rows.append([arch, f"{t_train*1e3:.1f}ms", f"{t_decode*1e3:.2f}ms",
                      f"{float(metrics['loss']):.3f}"])
         record[arch] = {"train_step_s": t_train, "decode_step_s": t_decode}
-    print(table(rows, ["arch", "train_step", "decode_step", "loss"]))
+    if rows:
+        print(table(rows, ["arch", "train_step", "decode_step", "loss"]))
+
+    # explicit-vs-GSPMD MoE through the engine (simulated multi-device mesh)
+    moe = _moe_explicit_section(quick, schedule)
+    record["moe_explicit"] = moe
+    if "skipped" in moe:
+        print(f"\n-- explicit MoE: {moe['skipped']} --")
+    else:
+        print("\n-- explicit-vs-GSPMD MoE (engine-routed exchanges) --")
+        print(table(
+            [[moe["arch"], f"{moe['t_gspmd_s']*1e3:.1f}ms",
+              f"{moe['t_explicit_s']*1e3:.1f}ms",
+              f"{moe['t_dp_step_s']*1e3:.1f}ms",
+              moe["resolved"]["moe.dispatch"],
+              moe["resolved"]["moe.combine"],
+              moe["resolved"]["dp.grads"], str(moe["nchunks"]),
+              f"{moe['max_abs_err_vs_gspmd']:.2e}"]],
+            ["arch", "gspmd", "explicit", "dp_step", "dispatch", "combine",
+             "dp.grads", "S", "max|err|"]))
+    _gate_resolved(moe)
 
     # production roofline per arch (train_4k, single pod) from the dry-run
     if os.path.isdir(DRYRUN_DIR):
@@ -85,8 +252,6 @@ def main(quick: bool = False, schedule=None):
             if rec.get("status") != "ok":
                 continue
             bound = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
-            mfu_bound = rec["model_flops"] / 512 / (bound * 197e12 * 256 / 512) \
-                if bound else 0
             rows.append([arch, f"{rec['compute_s']:.3g}",
                          f"{rec['memory_s']:.3g}",
                          f"{rec['collective_s']:.3g}", rec["dominant"],

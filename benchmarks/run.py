@@ -34,7 +34,10 @@ One module per paper table/figure (DESIGN.md §6):
   hpl_scaling      Figs. 14/15
   legacy_suite     Fig. 16
   resource_table   Table 7 analogue (production-mesh compiled footprints)
-  lm_step_bench    beyond-paper LM roofline table
+  lm_step_bench    beyond-paper LM roofline table + explicit-vs-GSPMD MoE
+                   (engine-routed expert exchanges; records the resolved
+                   moe.dispatch / moe.combine / dp.grads schedules and
+                   exits 1 if any is unregistered — the --autotune gate)
   overlap_bench    Figs. 5/7 analogue (lookahead HPL + bucketed reduction)
 """
 from __future__ import annotations
@@ -75,7 +78,10 @@ SWEEP_OPS = {
     "hpl_scaling": "bcast",
     "legacy_suite": None,      # embarrassingly parallel — ignores schedule
     "resource_table": None,
-    "lm_step_bench": None,     # GSPMD path — XLA picks the collectives
+    # the GSPMD steps ignore schedule (XLA picks the collectives), but the
+    # explicit-MoE section routes its dispatch/combine exchanges through the
+    # engine — the sweep exercises every registered all_to_all_tiles schedule
+    "lm_step_bench": "all_to_all_tiles",
     "overlap_bench": "allreduce",
 }
 

@@ -632,6 +632,30 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
         _, t = timeit(fn, blk, x, reps=reps, warmup=1)
         return t
 
+    if op == "all_to_all_tiles@moe.dispatch":
+        # MoE's paired exchanges on the ring: the dispatch all-to-all
+        # (experts split across ranks, batch shards gathered), the expert
+        # compute touching every landed tile, and the inverse combine
+        # exchange — measured back-to-back, the pattern an isolated
+        # all-to-all misses (the second exchange departs while the first's
+        # rendezvous state is still warm).
+        L = max(elems // nranks, 1)
+        x = jnp.asarray(np.ones((nranks, nranks, L), np.float32))
+        spec = P(names[0], None, None)
+
+        def body(v):
+            # v is the local (B_loc=1, E=nranks, L) dispatch buffer
+            buf = engine.all_to_all_tiles(v, names[0], split_axis=1,
+                                          concat_axis=0)  # dispatch
+            buf = jax.nn.silu(buf) * buf  # stand-in expert FFN
+            return engine.all_to_all_tiles(buf, names[0], split_axis=0,
+                                           concat_axis=1)  # combine
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, x, reps=reps, warmup=1)
+        return t
+
     if op == "grid_transpose":
         pg = mesh.shape[names[0]]
         side = max(int(math.sqrt(elems)), 1)
@@ -664,9 +688,23 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
     return t
 
 
+# callsite patterns that time *both* directions of a paired exchange: the
+# measured winner applies to every tag of the pair
+PAIRED_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "all_to_all_tiles@moe.dispatch": ("all_to_all_tiles@moe.combine",),
+}
+
+# callsite patterns measured on the square torus (HPL's row/column
+# broadcasts); everything else — including the MoE paired exchange — runs
+# on the all-device ring
+_TORUS_OPS = ("grid_transpose", "bcast@hpl.panel")
+
+
 def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
+                                           "all_to_all_tiles",
                                            "ring_exchange", "grid_transpose",
-                                           "bcast@hpl.panel"),
+                                           "bcast@hpl.panel",
+                                           "all_to_all_tiles@moe.dispatch"),
                   sizes: Optional[Sequence[int]] = None, reps: int = 3,
                   quick: bool = False, verbose: bool = True
                   ) -> Tuple[TuningTable, Dict]:
@@ -674,13 +712,17 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     build a :class:`TuningTable` of per-size winners.
 
     Ring ops run over a ring of all devices; ``grid_transpose`` over the
-    largest square torus. An ``op@callsite`` entry (``"bcast@hpl.panel"``)
-    measures the op inside that callsite's pattern — here HPL's panel bcast
-    back-to-back with the diagonal-block bcast on the torus row axis — and
-    lands under the tagged tuning-table key, consulted first when the engine
-    resolves with the matching callsite. Returns ``(table, record)`` where
-    ``record`` holds the raw per-(op, schedule, size) timings for the bench
-    artifact."""
+    largest square torus. An ``op@callsite`` entry measures the op inside
+    that callsite's pattern and lands under the tagged tuning-table key,
+    consulted first when the engine resolves with the matching callsite:
+    ``"bcast@hpl.panel"`` times HPL's panel bcast back-to-back with the
+    diagonal-block bcast on the torus row axis, and
+    ``"all_to_all_tiles@moe.dispatch"`` times the MoE dispatch exchange,
+    a stand-in expert FFN, and the inverse combine exchange back-to-back on
+    the ring (the winner lands under both ``@moe.dispatch`` and
+    ``@moe.combine`` — the pattern is direction-symmetric). Returns
+    ``(table, record)`` where ``record`` holds the raw per-(op, schedule,
+    size) timings for the bench artifact."""
     import jax
 
     from repro.comm.engine import schedules_for
@@ -702,16 +744,15 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     record: Dict[str, Dict] = {}
     for op in ops:
         base_op = op.split("@", 1)[0]
-        on_torus = op == "grid_transpose" or "@" in op
-        mesh = torus if on_torus else ring
+        mesh = torus if op in _TORUS_OPS else ring
         if mesh is None:
             continue
         topo = MeshTopology.from_mesh(mesh)
         if "@" in op:
-            # callsite patterns are measured along one torus axis but the
-            # HPL pattern is row/column-symmetric: the winner is stored
-            # under every single-axis signature so the l_panel bcast on
-            # "cols" (sig torus_col[pg]) matches too
+            # callsite patterns are measured along one axis; the HPL pattern
+            # is row/column-symmetric, so the winner is stored under every
+            # single-axis signature (the l_panel bcast on "cols", sig
+            # torus_col[pg], matches too). On the ring there is one axis.
             sig = axis_signature([topo.axis(topo.names()[0])])
             extra_sigs = [axis_signature([topo.axis(a)])
                           for a in topo.names()[1:]]
@@ -741,6 +782,7 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                 print(f"  [autotune] {op:16s} {S:>9d}B -> {best:8s} ({ladder})")
         if winners:
             bounds = _winner_bounds(measured_sizes, winners)
-            for s in [sig] + extra_sigs:
-                table.set(op, s, bounds)
+            for key in (op,) + PAIRED_ALIASES.get(op, ()):
+                for s in [sig] + extra_sigs:
+                    table.set(key, s, bounds)
     return table, record

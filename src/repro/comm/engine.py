@@ -24,7 +24,10 @@ Ops
 ``grid_transpose(x, axes, pg)``               PTRANS partner exchange on a torus
 ``pipelined(op, x, axis, nchunks=...)``       software-pipelining transform:
                                               split any single-payload op
-                                              into S in-flight chunks whose
+                                              (bcast / allreduce /
+                                              grid_transpose /
+                                              all_to_all_tiles) into S
+                                              in-flight chunks whose
                                               per-chunk consumer compute
                                               overlaps the next chunk's wire
                                               hops (chunk count from the
@@ -694,7 +697,8 @@ class CollectiveEngine:
 
     def allreduce_tree(self, tree, axis, *,
                        bucket_bytes: Optional[int] = None,
-                       schedule: Optional[str] = None):
+                       schedule: Optional[str] = None,
+                       callsite: Optional[str] = None):
         """Sum a pytree over ``axis`` in independent ~``bucket_bytes`` buckets.
 
         Leaves are greedily packed in order (reverse-mode autodiff emits
@@ -706,7 +710,10 @@ class CollectiveEngine:
         leaves. Zero-size leaves pass through untouched.
 
         ``bucket_bytes=None`` (default) derives the size from the topology
-        and hardware model via :meth:`bucket_bytes_for`.
+        and hardware model via :meth:`bucket_bytes_for`. ``callsite``
+        (e.g. ``"dp.grads"``) tags every bucket's allreduce so measured
+        tuning-table entries for the bucketed-gradient pattern win over the
+        isolated-allreduce entry.
         """
         self._check_axis(axis)
         if bucket_bytes is None:
@@ -720,7 +727,8 @@ class CollectiveEngine:
                     groups.setdefault(jnp.dtype(leaves[i].dtype), []).append(i)
             for idxs in groups.values():
                 flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
-                red = self.allreduce(flat, axis, schedule=schedule)
+                red = self.allreduce(flat, axis, schedule=schedule,
+                                     callsite=callsite)
                 off = 0
                 for i in idxs:
                     n = leaves[i].size
@@ -768,27 +776,46 @@ class CollectiveEngine:
         of the ACCL latency studies). Results are concatenated along
         ``concat_axis`` (default ``split_axis``; pass a different axis when
         ``consume`` reorients the strip, e.g. PTRANS's transpose-add).
+        For ``all_to_all_tiles`` the strip axis indexes positions that ride
+        along unchanged through the exchange (e.g. the MoE capacity slots),
+        so the concatenated strips equal the monolithic exchange bitwise.
 
         ``nchunks="auto"`` resolves through :meth:`pipeline_chunks` (the
         alpha-beta fill-cost model); any value is clamped to the strip count
         available along ``split_axis``, so over-chunking degrades gracefully
         to one row per strip. ``nchunks=1`` is exactly the monolithic op —
         and every chunking is *bit-identical* to it for data-movement ops
-        (bcast / grid_transpose), since chunk boundaries only partition the
-        payload.
+        (bcast / grid_transpose / all_to_all_tiles), since chunk boundaries
+        only partition the payload.
 
         Extra op operands ride ``opkw``: ``src=`` for bcast, ``pg=`` for
-        grid_transpose.
+        grid_transpose, ``tile_split_axis=`` / ``tile_concat_axis=`` for
+        all_to_all_tiles (the *tile* axes of the exchange, distinct from the
+        pipeline's own ``split_axis``/``concat_axis`` strip axes — the strip
+        axis must name a third axis, since slicing along a tile axis would
+        change the tile boundaries the exchange moves).
         """
-        supported = ("bcast", "allreduce", "grid_transpose")
+        supported = ("bcast", "allreduce", "grid_transpose",
+                     "all_to_all_tiles")
         if op not in supported:
             raise ValueError(
                 f"pipelined supports single-payload ops {supported}, "
                 f"got {op!r}")
-        required = {"bcast": "src", "grid_transpose": "pg"}.get(op)
-        if required is not None and required not in opkw:
-            raise ValueError(
-                f"pipelined({op!r}) requires the {required}= operand")
+        required = {"bcast": ("src",), "grid_transpose": ("pg",),
+                    "all_to_all_tiles": ("tile_split_axis",
+                                         "tile_concat_axis")}.get(op, ())
+        for name in required:
+            if name not in opkw:
+                raise ValueError(
+                    f"pipelined({op!r}) requires the {name}= operand")
+        if op == "all_to_all_tiles":
+            tiles = {int(opkw["tile_split_axis"]) % x.ndim,
+                     int(opkw["tile_concat_axis"]) % x.ndim}
+            if int(split_axis) % x.ndim in tiles:
+                raise ValueError(
+                    "pipelined('all_to_all_tiles') strip split_axis "
+                    f"{split_axis} collides with a tile axis {sorted(tiles)}; "
+                    "strips must partition an axis the exchange leaves alone")
         self._check_axis(axis)
         size = x.shape[split_axis]
         nbytes = _payload_bytes(x)
@@ -814,6 +841,11 @@ class CollectiveEngine:
             elif op == "allreduce":
                 out = self.allreduce(strip, axis, schedule=resolved,
                                      callsite=callsite)
+            elif op == "all_to_all_tiles":
+                out = self.all_to_all_tiles(
+                    strip, axis, split_axis=opkw["tile_split_axis"],
+                    concat_axis=opkw["tile_concat_axis"], schedule=resolved,
+                    callsite=callsite)
             else:
                 out = self.grid_transpose(strip, axis, opkw["pg"],
                                           schedule=resolved,

@@ -163,6 +163,11 @@ def shard_state(state: TrainState, mesh: Mesh, *, zero1: bool = True,
 # paper-faithful explicit-collectives DP step (shard_map over 'x')
 # ---------------------------------------------------------------------------
 
+# tuning-table callsite tag for the bucketed gradient reduction: buckets are
+# issued back-to-back against the remaining backward compute, so a measured
+# ``allreduce@dp.grads`` table entry wins over the isolated-allreduce entry
+GRADS_CALLSITE = "dp.grads"
+
 
 def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
                                 *, axis: str = "x",
@@ -184,7 +189,9 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
     through the cost model (:mod:`repro.comm.autotune`).
     ``bucket_bytes=None`` derives the bucket size from the DP-axis topology
     and hardware link numbers (pipeline depth x per-hop latency-bandwidth
-    product) instead of a fixed constant.
+    product) instead of a fixed constant. Every bucket's reduction is tagged
+    ``dp.grads``, so a measured tuning-table entry for the bucketed-gradient
+    pattern overrides the isolated-allreduce entry per callsite.
 
     ``run_cfg.grad_compression`` turns on the int8 error-feedback reduction
     (beyond-paper): that path reduces *leaf-wise* — per-leaf error state
@@ -222,7 +229,7 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
         else:
             grads = engine.allreduce_tree(
                 jax.tree.map(lambda g: g.astype(jnp.float32) / ndev, grads),
-                axis, bucket_bytes=bucket_bytes)
+                axis, bucket_bytes=bucket_bytes, callsite=GRADS_CALLSITE)
             new_error = state.error
         loss = engine.allreduce(loss / ndev, axis)
 

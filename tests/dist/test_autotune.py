@@ -209,6 +209,69 @@ def test_measured_callsite_entry_round_trip(tmp_path):
         == CostModel(table=None).choose("bcast", 1024, axes)
 
 
+def test_measured_moe_callsite_entry_round_trip(tmp_path):
+    """The paired MoE dispatch+combine pattern measures on the ring under
+    its tagged key — and, because the pattern is direction-symmetric, the
+    winner also lands under the @moe.combine alias. A model with that table
+    resolves both callsites through it; untagged lookups fall back to the
+    analytic ranking."""
+    from repro.comm.topology import AxisTopology
+    table, record = autotune_mesh(ops=("all_to_all_tiles@moe.dispatch",),
+                                  sizes=(1024,), reps=1, verbose=False)
+    sig = f"ring[{NDEV}]"
+    assert sig in table.entries.get("all_to_all_tiles@moe.dispatch", {})
+    rows = table.entries["all_to_all_tiles@moe.dispatch"][sig]
+    for _, name in rows:
+        assert name in schedules_for("all_to_all_tiles")
+    assert record
+    # the combine alias carries the same measured bands
+    assert table.entries["all_to_all_tiles@moe.combine"][sig] == rows
+
+    loaded = TuningTable.load(table.save(tmp_path / "tuning.json"))
+    axes = (AxisTopology("x", NDEV, "ring"),)
+    m = CostModel(table=loaded)
+    for cs in ("moe.dispatch", "moe.combine"):
+        assert m.choose("all_to_all_tiles", 1024, axes,
+                        callsite=cs) == rows[0][1]
+    # no callsite -> no tagged entry consulted -> analytic pick
+    assert m.choose("all_to_all_tiles", 1024, axes) \
+        == CostModel(table=None).choose("all_to_all_tiles", 1024, axes)
+
+
+def test_dp_grads_callsite_threads_through_allreduce_tree(ring):
+    """allreduce_tree(callsite="dp.grads") consults the tagged table entry
+    for its buckets — forcing a distinguishable schedule via the tag changes
+    nothing numerically (exact integer payloads) but resolves through it."""
+    from repro.comm.autotune import axis_signature
+    from repro.comm.topology import AxisTopology, MeshTopology
+    axes = (AxisTopology("x", NDEV, "ring"),)
+    t = TuningTable()
+    t.set("allreduce@dp.grads", axis_signature(axes), [(None, "chain")])
+    eng = CollectiveEngine(schedule="auto",
+                           topology=MeshTopology.from_mesh(ring),
+                           cost_model=CostModel(table=t))
+    assert eng.schedule_for("allreduce", nbytes=1 << 20, axis="x",
+                            callsite="dp.grads") == "chain"
+    assert eng.schedule_for("allreduce", nbytes=1 << 20, axis="x") \
+        == CostModel(table=None).choose("allreduce", 1 << 20, axes)
+
+    tree = {"w": np.arange(NDEV * 6, dtype=np.float32).reshape(NDEV, 6),
+            "b": np.ones((NDEV, 3), np.float32)}
+
+    def body(tr):
+        loc = jax.tree.map(lambda v: v[0], tr)
+        out = eng.allreduce_tree(loc, "x", callsite="dp.grads")
+        return jax.tree.map(lambda v: v[None], out)
+
+    fn = jax.jit(shard_map(body, mesh=ring, in_specs=(P("x"),),
+                           out_specs=P("x"), check_vma=False))
+    out = fn(jax.tree.map(jnp.asarray, tree))
+    for k, x in tree.items():
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.broadcast_to(x.sum(0), out[k].shape),
+            err_msg=k)
+
+
 def test_measured_autotune_round_trip(tmp_path):
     table, record = autotune_mesh(ops=("allreduce",), sizes=(1024, 1 << 16),
                                   reps=1, verbose=False)

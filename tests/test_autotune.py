@@ -341,6 +341,90 @@ def test_callsite_stale_entry_falls_back():
     assert choice == analytic().choose("bcast", KiB, RING8)
 
 
+def test_moe_and_dp_callsite_keys_round_trip():
+    """The application-exchange tags — all_to_all_tiles@moe.dispatch /
+    @moe.combine and allreduce@dp.grads — behave exactly like the HPL
+    callsite keys: tagged lookup wins over untagged, unknown callsites fall
+    through, and the keys survive the json round trip."""
+    t = TuningTable()
+    sig = axis_signature(RING8)
+    t.set("all_to_all_tiles", sig, [(None, "native")])
+    t.set("all_to_all_tiles@moe.dispatch", sig, [(64 * KiB, "chain"),
+                                                 (None, "native")])
+    t.set("all_to_all_tiles@moe.combine", sig, [(None, "chain")])
+    t.set("allreduce@dp.grads", sig, [(None, "rs_ag")])
+
+    assert t.lookup("all_to_all_tiles", sig, KiB,
+                    callsite="moe.dispatch") == "chain"
+    assert t.lookup("all_to_all_tiles", sig, 1 * MiB,
+                    callsite="moe.dispatch") == "native"
+    assert t.lookup("all_to_all_tiles", sig, KiB,
+                    callsite="moe.combine") == "chain"
+    assert t.lookup("all_to_all_tiles", sig, KiB) == "native"  # untagged
+    assert t.lookup("all_to_all_tiles", sig, KiB,
+                    callsite="other") == "native"  # falls through
+    # dp.grads has no untagged allreduce entry: plain lookups miss entirely
+    assert t.lookup("allreduce", sig, MiB, callsite="dp.grads") == "rs_ag"
+    assert t.lookup("allreduce", sig, MiB) is None
+
+    loaded = TuningTable.from_json(t.to_json())
+    for cs, size, want in (("moe.dispatch", KiB, "chain"),
+                           ("moe.combine", KiB, "chain")):
+        assert loaded.lookup("all_to_all_tiles", sig, size,
+                             callsite=cs) == want
+    assert loaded.lookup("allreduce", sig, MiB,
+                         callsite="dp.grads") == "rs_ag"
+
+    m = CostModel(table=loaded)
+    assert m.choose("all_to_all_tiles", KiB, RING8,
+                    callsite="moe.dispatch") == "chain"
+    assert m.choose("allreduce", MiB, RING8, callsite="dp.grads") == "rs_ag"
+    assert m.choose("allreduce", MiB, RING8) \
+        == analytic().choose("allreduce", MiB, RING8)
+
+
+def test_moe_and_dp_callsite_stale_entries_fall_back():
+    """Stale tagged winners (schedule since deleted, or lossy) are ignored
+    exactly like the untagged stale path — resolution falls back to the
+    analytic ranking instead of naming an unregistered schedule."""
+    t = TuningTable()
+    sig = axis_signature(RING8)
+    t.set("all_to_all_tiles@moe.dispatch", sig, [(None, "deleted_schedule")])
+    t.set("allreduce@dp.grads", sig, [(None, "int8_ef")])  # lossy: never auto
+    m = CostModel(table=t)
+    a2a = m.choose("all_to_all_tiles", KiB, RING8, callsite="moe.dispatch")
+    assert a2a == analytic().choose("all_to_all_tiles", KiB, RING8)
+    assert a2a in schedules_for("all_to_all_tiles")
+    red = m.choose("allreduce", MiB, RING8, callsite="dp.grads")
+    assert red == analytic().choose("allreduce", MiB, RING8)
+    assert red not in LOSSY_SCHEDULES
+
+
+def test_moe_callsite_backend_guard(tmp_path, monkeypatch):
+    """A foreign-backend table carrying the MoE/DP callsite keys is rejected
+    wholesale by default_cost_model — mirroring the bcast@hpl.panel
+    stale-backend behavior."""
+    import jax
+
+    from repro.comm.autotune import default_cost_model
+    try:
+        t = TuningTable(meta={"backend": "definitely_not_"
+                              + jax.default_backend()})
+        sig = axis_signature(RING8)
+        t.set("all_to_all_tiles@moe.dispatch", sig, [(None, "chain")])
+        t.set("allreduce@dp.grads", sig, [(None, "rs_ag")])
+        monkeypatch.setenv("REPRO_TUNING_TABLE",
+                           str(t.save(tmp_path / "foreign.json")))
+        m = default_cost_model(refresh=True)
+        assert m.table is None
+        assert m.choose("all_to_all_tiles", KiB, RING8,
+                        callsite="moe.dispatch") \
+            == analytic().choose("all_to_all_tiles", KiB, RING8)
+    finally:
+        monkeypatch.delenv("REPRO_TUNING_TABLE")
+        default_cost_model(refresh=True)  # restore process-wide state
+
+
 def test_stale_table_entry_falls_back_to_analytic():
     t = TuningTable()
     t.set("allreduce", axis_signature(RING8), [(None, "deleted_schedule")])

@@ -130,6 +130,41 @@ def test_pipelined_rejects_unsupported_ops():
     with pytest.raises(ValueError, match="pg"):
         eng.pipelined("grid_transpose", jnp.zeros((4, 4)),
                       ("rows", "cols"), nchunks=2)
+    with pytest.raises(ValueError, match="tile_split_axis"):
+        eng.pipelined("all_to_all_tiles", jnp.zeros((4, 4, 4)), "x",
+                      nchunks=2, split_axis=2)
+    with pytest.raises(ValueError, match="tile_concat_axis"):
+        eng.pipelined("all_to_all_tiles", jnp.zeros((4, 4, 4)), "x",
+                      nchunks=2, split_axis=2, tile_split_axis=0)
+    # strips along a tile axis would change the tile boundaries the
+    # exchange moves — rejected before any slicing happens
+    for bad in (0, 1):
+        with pytest.raises(ValueError, match="tile axis"):
+            eng.pipelined("all_to_all_tiles", jnp.zeros((4, 4, 4)), "x",
+                          nchunks=2, split_axis=bad, tile_split_axis=0,
+                          tile_concat_axis=1)
+
+
+@pytest.mark.parametrize("nchunks", [1, 2, 3, 64, "auto"])
+def test_pipelined_a2a_single_rank_identity(nchunks):
+    """The pipelined all_to_all_tiles on a 1-rank axis reproduces the input
+    exactly for every chunk count (strips along the capacity-style axis,
+    tile axes untouched)."""
+    mesh = make_mesh((1,), ("x",))
+    eng = CollectiveEngine.for_mesh(mesh)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((1, 2, 6, 4)),
+                    jnp.float32)
+
+    def body(v):
+        return eng.pipelined("all_to_all_tiles", v[0], "x", nchunks=nchunks,
+                             split_axis=2, tile_split_axis=1,
+                             tile_concat_axis=0)[None]
+
+    fn = jax.jit(shard_map(body, mesh=mesh,
+                           in_specs=(P("x", None, None, None),),
+                           out_specs=P("x", None, None, None),
+                           check_vma=False))
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(x))
 
 
 @pytest.mark.parametrize("nchunks", [1, 2, 3, 64, "auto"])

@@ -5,12 +5,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (optional [test] extra)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import compression
+from repro.comm.engine import CollectiveEngine, schedules_for
+from repro.compat import make_mesh, shard_map
 from repro.core import models
 from repro.core.ptrans import distribute_cyclic, undistribute_cyclic
 from repro.data import DataConfig, SyntheticLMDataset
@@ -19,6 +22,9 @@ from repro.models.model import next_token_loss
 from repro.roofline import _wire_factor, shape_bytes
 
 SETTINGS = settings(max_examples=25, deadline=None)
+# collective property tests jit-compile per drawn shape: keep the example
+# count small and the shape pools discrete so the compile cache saturates
+A2A_SETTINGS = settings(max_examples=10, deadline=None)
 
 
 # --- PQ block-cyclic distribution is a bijection ---------------------------
@@ -166,6 +172,102 @@ def test_data_pure_function_of_step_shard(step, seed):
     a = SyntheticLMDataset(cfg).batch(step, 1, 2)["tokens"]
     b = SyntheticLMDataset(cfg).batch(step, 1, 2)["tokens"]
     np.testing.assert_array_equal(a, b)
+
+
+# --- all_to_all_tiles: schedule equivalence + pipelined == monolithic --------
+#
+# Runs over a ring of however many devices this process sees (1 locally; the
+# CI tier-1 job sets the 8-device XLA flag, so the schedules exchange for
+# real there). The 8-device-only MoE layer equivalence lives in
+# tests/dist/test_moe.py; these randomized-shape/dtype properties cover
+# every all_to_all_tiles callsite shape the engine can see.
+
+_NDEV = len(jax.devices())
+_A2A_MESH = make_mesh((_NDEV,), ("x",))
+_A2A_DTYPES = ["float32", "int32", "bfloat16", "float16"]
+
+
+def _a2a_run(schedule, x, split_axis, concat_axis):
+    eng = CollectiveEngine.for_mesh(_A2A_MESH, schedule=schedule)
+
+    def body(v):
+        return eng.all_to_all_tiles(v[0], "x", split_axis=split_axis,
+                                    concat_axis=concat_axis)[None]
+
+    spec = P("x", *([None] * (x.ndim - 1)))
+    fn = jax.jit(shard_map(body, mesh=_A2A_MESH, in_specs=(spec,),
+                           out_specs=spec, check_vma=False))
+    return np.asarray(fn(x).astype(jnp.float32))
+
+
+def _a2a_reference(g, split_axis, concat_axis):
+    """Rank j receives split j of every source rank, ordered by source."""
+    n = g.shape[0]
+    return np.stack([
+        np.concatenate([np.split(g[i], n, axis=split_axis)[j]
+                        for i in range(n)], axis=concat_axis)
+        for j in range(n)])
+
+
+@A2A_SETTINGS
+@given(tiles=st.sampled_from([1, 2]), rows=st.sampled_from([0, 1, 3]),
+       d=st.sampled_from([1, 4]), dtype=st.sampled_from(_A2A_DTYPES),
+       concat=st.sampled_from([0, 1]), seed=st.integers(0, 2**31 - 1))
+def test_a2a_schedule_equivalence_randomized(tiles, rows, d, dtype, concat,
+                                             seed):
+    """Every registered all_to_all_tiles schedule moves identical bytes for
+    random shapes (including 0-row payloads) and dtypes — small-integer
+    values, so every dtype carries them exactly."""
+    rng = np.random.default_rng(seed)
+    g = rng.integers(-8, 8, (_NDEV, _NDEV * tiles, rows, d))
+    x = jnp.asarray(g).astype(dtype)
+    want = _a2a_reference(np.asarray(g, np.float32), 0, concat)
+    for schedule in sorted(schedules_for("all_to_all_tiles")):
+        got = _a2a_run(schedule, x, split_axis=0, concat_axis=concat)
+        np.testing.assert_array_equal(got.reshape(want.shape), want,
+                                      err_msg=f"{schedule}/{dtype}")
+
+
+@A2A_SETTINGS
+@given(nchunks=st.sampled_from([1, 2, 3, 7, 64, "auto"]),
+       rows=st.sampled_from([0, 1, 5, 8]),
+       dtype=st.sampled_from(_A2A_DTYPES),
+       schedule=st.sampled_from(sorted(schedules_for("all_to_all_tiles"))),
+       seed=st.integers(0, 2**31 - 1))
+def test_pipelined_a2a_matches_monolithic_randomized(nchunks, rows, dtype,
+                                                     schedule, seed):
+    """engine.pipelined('all_to_all_tiles', ...) is bit-identical to the
+    monolithic exchange for every chunk count (non-divisible strip counts,
+    nchunks > rows clamped to one row per strip, 0-row strip axes) — chunk
+    boundaries only partition the payload along an axis the exchange leaves
+    alone."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(-8, 8, (_NDEV, _NDEV * 2, rows, 3))
+                    ).astype(dtype)
+    eng = CollectiveEngine.for_mesh(_A2A_MESH, schedule=schedule)
+    spec = P("x", None, None, None)
+
+    def run(pipelined):
+        def body(v):
+            loc = v[0]
+            if pipelined:
+                out = eng.pipelined("all_to_all_tiles", loc, "x",
+                                    nchunks=nchunks, split_axis=1,
+                                    tile_split_axis=0, tile_concat_axis=0)
+            else:
+                out = eng.all_to_all_tiles(loc, "x", split_axis=0,
+                                           concat_axis=0)
+            return out[None]
+        fn = jax.jit(shard_map(body, mesh=_A2A_MESH, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        return np.asarray(fn(g).astype(jnp.float32))
+
+    np.testing.assert_array_equal(run(True), run(False),
+                                  err_msg=f"{schedule}/{dtype}/{nchunks}")
+
+
+# (pipelined-a2a argument validation lives in
+# tests/test_engine.py::test_pipelined_rejects_unsupported_ops)
 
 
 # --- HLO shape parser --------------------------------------------------------
