@@ -1,13 +1,19 @@
 """Beyond-paper — LM train/serve step timings (reduced configs, measured on
 CPU for regression) + the production-mesh roofline summary per assigned
-architecture (read from the dry-run results), plus the explicit-vs-GSPMD
-MoE comparison: the qwen3-moe config's expert layer run once through the
-GSPMD path (XLA inserts the exchanges) and once through the engine-routed
-``apply_moe_explicit`` path on the simulated multi-device mesh, with the
-per-callsite resolved schedules (``moe.dispatch`` / ``moe.combine`` /
-``dp.grads``) recorded in the result — never the literal ``"auto"``. The
-module fails with SystemExit(1) if any resolution names an unregistered
-schedule (the same gate ``--autotune`` applies)."""
+architecture (read from the dry-run results), plus two explicit-vs-GSPMD
+comparisons on the simulated multi-device mesh:
+
+* the qwen3-moe expert *layer* once through GSPMD ``apply_moe`` and once
+  through the engine-routed ``apply_moe_explicit``;
+* the *whole model* (tiny qwen3-moe) trained one step through
+  ``make_whole_model_train_step_explicit`` in both attention modes (``tp``
+  head-parallel, ``sp`` ring) against the GSPMD ``make_train_step`` on the
+  same mesh — loss / grad-norm / updated-param parity recorded.
+
+Both record every per-callsite resolved schedule (``moe.dispatch`` /
+``moe.combine`` / ``tp.qkv`` / ``sp.kv`` / ``dp.grads`` / ...) — never the
+literal ``"auto"``. The module fails with SystemExit(1) if any resolution
+names an unregistered schedule (the same gate ``--autotune`` applies)."""
 from __future__ import annotations
 
 import json
@@ -22,6 +28,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import RunConfig, get_config, list_archs, reduced  # noqa: E402
+from repro.configs.qwen3_moe_235b_a22b import tiny  # noqa: E402
 from repro.data import DataConfig, SyntheticLMDataset  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
 from repro.train.serve import make_decode_step, make_prefill_step  # noqa: E402
@@ -42,8 +49,6 @@ def _moe_explicit_section(quick: bool, schedule):
     ``dp.grads`` bucket reduction resolves against real payload sizes.
     Returns the result record with every per-callsite resolved schedule.
     """
-    from dataclasses import replace
-
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -58,11 +63,8 @@ def _moe_explicit_section(quick: bool, schedule):
         return {"skipped": f"explicit MoE needs >= 2 devices, have {ndev}"}
 
     requested = schedule or "auto"
-    cfg = reduced(get_config(MOE_ARCH), layers=1)
-    # experts must divide over the mesh axis for the explicit exchange
-    cfg = replace(cfg, num_experts=ndev,
-                  num_experts_per_tok=min(cfg.num_experts_per_tok, ndev),
-                  capacity_factor=2.0)
+    # one expert (shard) per device; capacity generous enough to drop nothing
+    cfg = tiny(ndev, layers=1)
     mesh = make_mesh((ndev,), ("x",))
     engine = CollectiveEngine.for_mesh(mesh, schedule=requested)
 
@@ -145,6 +147,139 @@ def _moe_explicit_section(quick: bool, schedule):
     }
 
 
+def _whole_model_section(quick: bool, schedule):
+    """Whole-model explicit-vs-GSPMD: tiny qwen3-moe, one train step.
+
+    The explicit step (:func:`make_whole_model_train_step_explicit`) runs
+    the full forward+backward inside one ``shard_map`` — attention
+    activations exchanged under ``tp.*`` / ``sp.*`` tags, MoE dispatch/
+    combine under ``moe.*``, gradient buckets under ``dp.grads`` — and is
+    compared against the GSPMD :func:`make_train_step` on the same mesh
+    from identical init: loss, grad norm, and every updated parameter.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm.callsites import (MOE_COMBINE, MOE_DISPATCH, SP_KV,
+                                      SP_OUT, SP_QKV, TP_OUT, TP_QKV)
+    from repro.comm.engine import CollectiveEngine
+    from repro.comm.overlap import pack_buckets
+    from repro.compat import make_mesh
+    from repro.models import moe as MOE
+    from repro.models.parallel import ATTN_MODES
+    from repro.train.step import (GRADS_CALLSITE,
+                                  make_whole_model_train_step_explicit,
+                                  whole_model_param_specs)
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return {"skipped":
+                f"whole-model explicit needs >= 2 devices, have {ndev}"}
+
+    requested = schedule or "auto"
+    cfg = tiny(ndev, layers=1)
+    mesh = make_mesh((ndev,), ("x",))
+    engine = CollectiveEngine.for_mesh(mesh, schedule=requested)
+    run_cfg = RunConfig(learning_rate=1e-3, warmup_steps=1)
+
+    B, S = ndev, (16 if quick else 32)
+    model = build_model(cfg)
+    data = SyntheticLMDataset(DataConfig(cfg.vocab_size, B, S))
+    batch = {"tokens": jnp.asarray(data.batch(0)["tokens"])}
+
+    # GSPMD reference on the same ring mesh (pure DP, params replicated)
+    state0 = init_train_state(model, jax.random.key(0))
+    ref_step = make_train_step(model, run_cfg, mesh, donate=False)
+    ref_state, ref_metrics = jax.block_until_ready(ref_step(state0, batch))
+    ref_leaves = [np.asarray(v, np.float32)
+                  for v in jax.tree.leaves(ref_state.params)]
+
+    modes = {}
+    for mode in ATTN_MODES:
+        step = make_whole_model_train_step_explicit(
+            model, run_cfg, mesh, attn_mode=mode, schedule_kind=requested,
+            nchunks="auto")
+        st = init_train_state(model, jax.random.key(0))
+        new_state, metrics = jax.block_until_ready(step(st, batch))
+        # parity against the GSPMD step from identical init (host copies
+        # first: the timing step below donates new_state's buffers)
+        param_err = max(
+            float(np.max(np.abs(np.asarray(a, np.float32) - b)))
+            if a.size else 0.0
+            for a, b in zip(jax.tree.leaves(new_state.params), ref_leaves))
+        loss_err = abs(float(metrics["loss"]) - float(ref_metrics["loss"]))
+        gnorm_err = abs(float(metrics["grad_norm"])
+                        - float(ref_metrics["grad_norm"]))
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(new_state, batch))
+        t_step = time.perf_counter() - t0
+        modes[mode] = {"t_step_s": t_step, "loss": float(metrics["loss"]),
+                       "loss_err_vs_gspmd": loss_err,
+                       "grad_norm_err_vs_gspmd": gnorm_err,
+                       "max_abs_param_err_vs_gspmd": param_err}
+
+    # per-callsite provenance at the actual per-rank payloads — resolved
+    # names recorded, never "auto"
+    H, KV, hd, D = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                    cfg.d_model)
+    C = MOE._capacity(cfg, S)
+    attn_bytes = (B // ndev) * S * H * hd * 4   # q/k/v a2a payload
+    kv_ring_bytes = B * (S // ndev) * KV * 2 * hd * 4  # concat [k|v] block
+    moe_bytes = (B // ndev) * cfg.num_experts * C * D * 4
+
+    def a2a(nbytes, cs):
+        return engine.schedule_for("all_to_all_tiles", nbytes=nbytes,
+                                   axis="x", callsite=cs)
+
+    resolved = {
+        TP_QKV: a2a(attn_bytes, TP_QKV),
+        TP_OUT: a2a(attn_bytes, TP_OUT),
+        SP_QKV: a2a(attn_bytes, SP_QKV),
+        SP_OUT: a2a(attn_bytes, SP_OUT),
+        SP_KV: engine.schedule_for("ring_exchange", nbytes=kv_ring_bytes,
+                                   axis="x", callsite=SP_KV),
+        MOE_DISPATCH: a2a(moe_bytes, MOE_DISPATCH),
+        MOE_COMBINE: a2a(moe_bytes, MOE_COMBINE),
+    }
+    # dp.grads reduces the REPLICATED leaves only (expert shards are
+    # complete per-rank and never ride the wire)
+    specs = whole_model_param_specs(state0.params)
+    s_leaves = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    rep_leaves = [v for v, s in zip(jax.tree.leaves(state0.params), s_leaves)
+                  if s == P()]
+    bucket_bytes = engine.bucket_bytes_for("x")
+    bucket_payloads = sorted({
+        sum(rep_leaves[i].size * 4 for i in b if rep_leaves[i].size)
+        for b in pack_buckets(rep_leaves, bucket_bytes)} - {0})
+    per_bucket = [engine.schedule_for("allreduce", nbytes=nb, axis="x",
+                                      callsite=GRADS_CALLSITE)
+                  for nb in bucket_payloads]
+    resolved[GRADS_CALLSITE] = per_bucket[-1]
+    nchunks = engine.pipeline_chunks("all_to_all_tiles", nbytes=moe_bytes,
+                                     axis="x", callsite=MOE_DISPATCH)
+    return {
+        "arch": MOE_ARCH, "devices": ndev,
+        "schedule_requested": requested,
+        "modes": modes, "resolved": resolved, "nchunks": nchunks,
+        "dp_grads_bucket_payloads": bucket_payloads,
+        "dp_grads_resolved_per_bucket": per_bucket,
+        "attn_exchange_bytes": attn_bytes,
+        "kv_ring_bytes": kv_ring_bytes,
+        "moe_exchange_bytes": moe_bytes,
+    }
+
+
+# callsite tag -> engine op, for the resolution gate below
+_GATE_OPS = {
+    "moe.dispatch": "all_to_all_tiles", "moe.combine": "all_to_all_tiles",
+    "tp.qkv": "all_to_all_tiles", "tp.out": "all_to_all_tiles",
+    "sp.qkv": "all_to_all_tiles", "sp.out": "all_to_all_tiles",
+    "sp.kv": "ring_exchange",
+    "dp.grads": "allreduce",
+}
+
+
 def _gate_resolved(section) -> None:
     """SystemExit(1) if any explicit-path resolution is unregistered or
     still the literal "auto" — the same gate as ``--autotune``."""
@@ -153,14 +288,12 @@ def _gate_resolved(section) -> None:
     resolved = (section or {}).get("resolved")
     if not resolved:
         return
-    ops = {"moe.dispatch": "all_to_all_tiles", "moe.combine": "all_to_all_tiles",
-           "dp.grads": "allreduce"}
     checks = list(resolved.items()) + [
         ("dp.grads", n) for n in section.get("dp_grads_resolved_per_bucket", ())]
     bad = [(cs, name) for cs, name in checks
-           if name == "auto" or name not in schedules_for(ops[cs])]
+           if name == "auto" or name not in schedules_for(_GATE_OPS[cs])]
     if bad:
-        print("UNREGISTERED explicit-MoE resolutions:", bad)
+        print("UNREGISTERED explicit-path resolutions:", bad)
         raise SystemExit(1)
 
 
@@ -238,6 +371,24 @@ def main(quick: bool = False, schedule=None):
             ["arch", "gspmd", "explicit", "dp_step", "dispatch", "combine",
              "dp.grads", "S", "max|err|"]))
     _gate_resolved(moe)
+
+    # whole-model explicit-vs-GSPMD training step (both attention modes)
+    whole = _whole_model_section(quick, schedule)
+    record["whole_model"] = whole
+    if "skipped" in whole:
+        print(f"\n-- whole-model explicit: {whole['skipped']} --")
+    else:
+        print("\n-- whole-model explicit-vs-GSPMD train step --")
+        print(table(
+            [[mode, f"{m['t_step_s']*1e3:.1f}ms",
+              f"{m['loss']:.4f}", f"{m['loss_err_vs_gspmd']:.2e}",
+              f"{m['grad_norm_err_vs_gspmd']:.2e}",
+              f"{m['max_abs_param_err_vs_gspmd']:.2e}"]
+             for mode, m in whole["modes"].items()],
+            ["mode", "step", "loss", "|dloss|", "|dgnorm|", "max|dparam|"]))
+        print("   resolved: " + " ".join(
+            f"{cs}={name}" for cs, name in sorted(whole["resolved"].items())))
+    _gate_resolved(whole)
 
     # production roofline per arch (train_4k, single pod) from the dry-run
     if os.path.isdir(DRYRUN_DIR):

@@ -656,6 +656,58 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
         _, t = timeit(fn, x, reps=reps, warmup=1)
         return t
 
+    if op == "all_to_all_tiles@tp.qkv":
+        # whole-model head-parallel attention pattern: THREE back-to-back
+        # head-gathering exchanges (q, k, v), the attention compute touching
+        # every landed tile, then the inverse batch-restoring exchange — the
+        # four-exchange burst an isolated all-to-all misses.
+        L = max(elems // nranks, 1)
+        x = jnp.asarray(np.ones((nranks, nranks, L), np.float32))
+        spec = P(names[0], None, None)
+
+        def body(t):
+            # t is the local (B_loc=1, H=nranks, L) activation
+            def gather(a):  # heads split out, batch gathered
+                return engine.all_to_all_tiles(a, names[0], split_axis=1,
+                                               concat_axis=0)
+            q, k, v = gather(t), gather(t * 0.5), gather(t * 0.25)
+            o = jax.nn.softmax(q * k, axis=-1) * v  # attention stand-in
+            return engine.all_to_all_tiles(o, names[0], split_axis=0,
+                                           concat_axis=1)
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, x, reps=reps, warmup=1)
+        return t
+
+    if op == "all_to_all_tiles@sp.qkv":
+        # whole-model sequence-parallel ring attention pattern: the seq-
+        # gathering exchanges for q/k/v, the k/v block circulating the ring
+        # (~n/2 bidirectional hops) with the online-softmax fold between
+        # hops, then the inverse exchange — the a2a's rendezvous interleaves
+        # with the ring traffic, which an isolated all-to-all misses.
+        L = max(elems // nranks, 1)
+        x = jnp.asarray(np.ones((nranks, nranks, L), np.float32))
+        spec = P(names[0], None, None)
+
+        def body(v):
+            def gather(a):  # sequence split out, batch gathered
+                return engine.all_to_all_tiles(a, names[0], split_axis=1,
+                                               concat_axis=0)
+            q, k, kv = gather(v), gather(v * 0.5), gather(v * 0.25)
+            acc = jax.nn.softmax(q * k, axis=-1) * kv  # local block fold
+            fwd = bwd = kv
+            for _ in range(max(nranks // 2, 1)):
+                fwd, bwd = engine.ring_exchange(fwd, bwd, names[0])
+                acc = acc + jax.nn.softmax(q * fwd, axis=-1) * bwd
+            return engine.all_to_all_tiles(acc, names[0], split_axis=0,
+                                           concat_axis=1)
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, x, reps=reps, warmup=1)
+        return t
+
     if op == "grid_transpose":
         pg = mesh.shape[names[0]]
         side = max(int(math.sqrt(elems)), 1)
@@ -692,6 +744,8 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
 # measured winner applies to every tag of the pair
 PAIRED_ALIASES: Dict[str, Tuple[str, ...]] = {
     "all_to_all_tiles@moe.dispatch": ("all_to_all_tiles@moe.combine",),
+    "all_to_all_tiles@tp.qkv": ("all_to_all_tiles@tp.out",),
+    "all_to_all_tiles@sp.qkv": ("all_to_all_tiles@sp.out",),
 }
 
 # callsite patterns measured on the square torus (HPL's row/column
@@ -704,7 +758,9 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                                            "all_to_all_tiles",
                                            "ring_exchange", "grid_transpose",
                                            "bcast@hpl.panel",
-                                           "all_to_all_tiles@moe.dispatch"),
+                                           "all_to_all_tiles@moe.dispatch",
+                                           "all_to_all_tiles@tp.qkv",
+                                           "all_to_all_tiles@sp.qkv"),
                   sizes: Optional[Sequence[int]] = None, reps: int = 3,
                   quick: bool = False, verbose: bool = True
                   ) -> Tuple[TuningTable, Dict]:
@@ -720,9 +776,15 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     ``"all_to_all_tiles@moe.dispatch"`` times the MoE dispatch exchange,
     a stand-in expert FFN, and the inverse combine exchange back-to-back on
     the ring (the winner lands under both ``@moe.dispatch`` and
-    ``@moe.combine`` — the pattern is direction-symmetric). Returns
-    ``(table, record)`` where ``record`` holds the raw per-(op, schedule,
-    size) timings for the bench artifact."""
+    ``@moe.combine`` — the pattern is direction-symmetric). The whole-model
+    attention patterns measure the same way: ``"all_to_all_tiles@tp.qkv"``
+    times the q/k/v head-gathering burst plus the inverse batch-restoring
+    exchange (winner aliased to ``@tp.out``), and
+    ``"all_to_all_tiles@sp.qkv"`` the seq-gathering exchanges interleaved
+    with the ring-attention kv hops (winner aliased to ``@sp.out``; the
+    hops themselves fall back to the untagged ``ring_exchange`` entry).
+    Returns ``(table, record)`` where ``record`` holds the raw per-(op,
+    schedule, size) timings for the bench artifact."""
     import jax
 
     from repro.comm.engine import schedules_for

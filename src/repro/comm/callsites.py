@@ -1,0 +1,87 @@
+"""Central registry of collective callsite tags.
+
+Every engine call that matters for tuning carries a **callsite tag** — a
+short ``owner.site`` string (``"moe.dispatch"``, ``"tp.qkv"``) passed as
+``callsite=`` to the :class:`~repro.comm.engine.CollectiveEngine` op. The
+tag keys measured :class:`~repro.comm.autotune.TuningTable` entries
+(``op@callsite``), so schedules measured *inside* a call pattern (HPL's
+back-to-back broadcasts, MoE's dispatch/FFN/combine sandwich) win over the
+isolated-op entry exactly where that pattern runs.
+
+This module is the single source of truth for the tag strings and their
+metadata. It is import-free on purpose (no jax, no repro siblings) so every
+layer — core kernels, models, train steps — can import its constants
+without cycles. The README's "Callsite tag registry" table mirrors
+:data:`CALLSITES` and ``tests/test_docs.py`` cross-checks the two, so the
+docs cannot drift from the code.
+
+Adding a tag:
+
+1. add the constant + a :class:`Callsite` entry here;
+2. pass the constant as ``callsite=`` at the new engine call;
+3. if the pattern deserves its own measurement, add an ``op@tag`` body to
+   :func:`repro.comm.autotune._measure_op` (and a ``PAIRED_ALIASES`` entry
+   when one measurement covers several tags), and set ``tuned`` here;
+4. add the row to the README table — the drift test enforces the rest.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# -- tag constants (import these at callsites; never inline the strings) ----
+
+HPL_BLOCK = "hpl.block"          # HPL diagonal-block bcast (torus row/col)
+HPL_PANEL = "hpl.panel"          # HPL panel bcast, dependent on the block
+PTRANS_EXCHANGE = "ptrans.exchange"  # PTRANS grid-transpose partner swap
+MOE_DISPATCH = "moe.dispatch"    # MoE token->expert all-to-all
+MOE_COMBINE = "moe.combine"      # MoE expert->token inverse all-to-all
+DP_GRADS = "dp.grads"            # bucketed data-parallel gradient allreduce
+TP_QKV = "tp.qkv"                # head-parallel attention: q/k/v head split
+TP_OUT = "tp.out"                # head-parallel attention: inverse exchange
+SP_QKV = "sp.qkv"                # ring attention: q/k/v sequence split
+SP_KV = "sp.kv"                  # ring attention: per-step kv block rotation
+SP_OUT = "sp.out"                # ring attention: inverse exchange
+
+
+@dataclass(frozen=True)
+class Callsite:
+    """Metadata for one tagged engine call.
+
+    ``op``      the engine op issued under this tag.
+    ``module``  the dotted module that owns the call (imports the constant).
+    ``const``   the constant's symbol name in this module.
+    ``tuned``   the ``op@callsite`` autotune pattern key whose measured
+                winner covers this tag (directly or via
+                ``autotune.PAIRED_ALIASES``); ``None`` means lookups fall
+                back to the untagged op entry.
+    """
+    op: str
+    module: str
+    const: str
+    tuned: Optional[str] = None
+
+
+CALLSITES: Dict[str, Callsite] = {
+    HPL_BLOCK: Callsite("bcast", "repro.core.hpl", "HPL_BLOCK"),
+    HPL_PANEL: Callsite("bcast", "repro.core.hpl", "HPL_PANEL",
+                        tuned="bcast@hpl.panel"),
+    PTRANS_EXCHANGE: Callsite("grid_transpose", "repro.core.ptrans",
+                              "PTRANS_EXCHANGE"),
+    MOE_DISPATCH: Callsite("all_to_all_tiles", "repro.models.moe",
+                           "MOE_DISPATCH",
+                           tuned="all_to_all_tiles@moe.dispatch"),
+    MOE_COMBINE: Callsite("all_to_all_tiles", "repro.models.moe",
+                          "MOE_COMBINE",
+                          tuned="all_to_all_tiles@moe.dispatch"),
+    DP_GRADS: Callsite("allreduce", "repro.train.step", "DP_GRADS"),
+    TP_QKV: Callsite("all_to_all_tiles", "repro.models.parallel", "TP_QKV",
+                     tuned="all_to_all_tiles@tp.qkv"),
+    TP_OUT: Callsite("all_to_all_tiles", "repro.models.parallel", "TP_OUT",
+                     tuned="all_to_all_tiles@tp.qkv"),
+    SP_QKV: Callsite("all_to_all_tiles", "repro.models.parallel", "SP_QKV",
+                     tuned="all_to_all_tiles@sp.qkv"),
+    SP_KV: Callsite("ring_exchange", "repro.models.parallel", "SP_KV"),
+    SP_OUT: Callsite("all_to_all_tiles", "repro.models.parallel", "SP_OUT",
+                     tuned="all_to_all_tiles@sp.qkv"),
+}

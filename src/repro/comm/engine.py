@@ -566,10 +566,25 @@ class CollectiveEngine:
         With ``nbytes`` (message payload) and ``axis`` (a topology axis name
         or tuple), ``auto`` resolves through the cost model; without them it
         falls back to the static per-op default, so provenance queries keep
-        working outside any callsite. ``callsite`` is an optional tag
-        (``"hpl.panel"``) letting measured tuning-table entries distinguish
-        call patterns — HPL's back-to-back bcasts tune independently of an
-        isolated bcast."""
+        working outside any callsite. The returned name is always a
+        registered schedule, never the literal ``"auto"`` — benchmarks call
+        this with the per-callsite payload to *report* what actually ran.
+
+        ``callsite`` is an optional tag from the central registry
+        (:mod:`repro.comm.callsites` — ``"hpl.panel"``, ``"moe.dispatch"``,
+        ``"tp.qkv"``, ``"dp.grads"``, ...) letting measured tuning-table
+        entries distinguish call patterns: HPL's back-to-back bcasts tune
+        independently of an isolated bcast, and the paired attention
+        exchanges inherit the entry measured for their forward tag (the
+        ``PAIRED_ALIASES`` mapping in :mod:`repro.comm.autotune`).
+
+        An explicit ``override`` must be registered for ``op``
+        (:class:`UnknownScheduleError` otherwise — checked before the
+        HOST_STAGED short-circuit so typos fail under every comm type);
+        HOST_STAGED always resolves to ``"staged"``; an engine-wide name
+        that does not cover ``op`` falls back to auto-resolution rather
+        than erroring, so one engine can drive ops with disjoint schedule
+        sets."""
         if op not in OPS:
             raise ValueError(f"unknown collective op {op!r}; ops are {OPS}")
         if override is not None and override != "auto" \
@@ -661,7 +676,20 @@ class CollectiveEngine:
                          schedule: Optional[str] = None,
                          callsite: Optional[str] = None):
         """Exchange tiles so rank i's j-th split lands on rank j, ordered by
-        source rank on ``concat_axis``."""
+        source rank on ``concat_axis``.
+
+        ``x`` is cut into ``axis``-size equal tiles along ``split_axis``;
+        the output concatenates the tiles received from ranks 0..n-1 along
+        ``concat_axis``, so running the exchange again with the two axes
+        swapped is an exact inverse — the round-trip every paired caller
+        relies on (``@moe.dispatch``/``@moe.combine`` for the expert
+        exchange, ``@tp.qkv``/``@tp.out`` and ``@sp.qkv``/``@sp.out`` for
+        the whole-model attention reshardings; tags and owners in
+        :mod:`repro.comm.callsites`). ``schedule`` must name a registered
+        ``all_to_all_tiles`` schedule (else :class:`UnknownScheduleError`);
+        ``None`` defers to the engine-wide resolution, with ``auto`` priced
+        on this call's payload and ``callsite``-tagged table entries taking
+        precedence."""
         self._check_axis(axis)
         fn = self._resolve("all_to_all_tiles", schedule,
                            nbytes=_payload_bytes(x), axis=axis,

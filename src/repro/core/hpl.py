@@ -52,6 +52,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.callsites import HPL_BLOCK, HPL_PANEL
 from repro.comm.engine import CollectiveEngine
 from repro.comm.types import CommunicationType
 from repro.compat import shard_map
@@ -108,20 +109,20 @@ def _panels(k, diag, row_panel, col_panel, *, pg: int, b: int,
 
     # 1. diagonal block (speculative on every device; selected by bcast)
     lu_local = lu_factor_block(diag, interpret=interpret)
-    lu_blk = engine.bcast(lu_local, "cols", pk, callsite="hpl.block")
-    lu_blk = engine.bcast(lu_blk, "rows", pk, callsite="hpl.block")
+    lu_blk = engine.bcast(lu_local, "cols", pk, callsite=HPL_BLOCK)
+    lu_blk = engine.bcast(lu_blk, "rows", pk, callsite=HPL_BLOCK)
 
     # 2. Top panel: U_kj = L_kk^{-1} A_kj on grid row pk, cols j > k
     u_panel = trsm_lower_left(lu_blk, row_panel, interpret=interpret)
     colmask = jnp.repeat(lj_global > k, b)  # (m,)
     u_panel = u_panel * colmask[None, :]
-    u_panel = engine.bcast(u_panel, "rows", pk, callsite="hpl.panel")
+    u_panel = engine.bcast(u_panel, "rows", pk, callsite=HPL_PANEL)
 
     # 3. Left panel: L_ik = A_ik U_kk^{-1} on grid col pk, rows i > k
     l_panel = trsm_upper_right(lu_blk, col_panel, interpret=interpret)
     rowmask = jnp.repeat(li_global > k, b)
     l_panel = l_panel * rowmask[:, None]
-    l_panel = engine.bcast(l_panel, "cols", pk, callsite="hpl.panel")
+    l_panel = engine.bcast(l_panel, "cols", pk, callsite=HPL_PANEL)
     return lu_blk, u_panel, l_panel
 
 
@@ -348,9 +349,9 @@ def run_hpl(mesh, comm=CommunicationType.ICI_DIRECT, *, n: int = 512,
     block_bytes = b * b * 4
     panel_bytes = b * m * 4
     resolved_block = engine.schedule_for("bcast", nbytes=block_bytes,
-                                         axis="rows", callsite="hpl.block")
+                                         axis="rows", callsite=HPL_BLOCK)
     resolved = engine.schedule_for("bcast", nbytes=panel_bytes, axis="rows",
-                                   callsite="hpl.panel")
+                                   callsite=HPL_PANEL)
     return BenchResult(
         name="hpl", metric_name="GFLOP/s", metric=hpl_flops(n) / t / 1e9,
         error=err, times={"best": t},

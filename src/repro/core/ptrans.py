@@ -42,6 +42,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.callsites import PTRANS_EXCHANGE
 from repro.comm.engine import CollectiveEngine
 from repro.comm.types import CommunicationType
 from repro.compat import shard_map
@@ -91,7 +92,7 @@ def undistribute_cyclic(shards: np.ndarray, pg: int, b: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-CALLSITE = "ptrans.exchange"  # tuning-table tag for the partner exchange
+CALLSITE = PTRANS_EXCHANGE  # tuning-table tag for the partner exchange
 
 
 def _ptrans_body(a_loc, b_loc, *, pg: int, engine: CollectiveEngine,

@@ -259,8 +259,16 @@ def apply_attention(
     causal: bool = True,
     use_rope: bool = True,
     shard=None,  # activation-constraint callback (enables the flash path)
+    attn_impl=None,  # explicit-path hook: (q, k, v, *, causal, q_offset) -> o
 ):
-    """Returns (out, new_cache). ``cache`` is updated at ``pos`` in decode."""
+    """Returns (out, new_cache). ``cache`` is updated at ``pos`` in decode.
+
+    ``attn_impl`` (if given) replaces the core attention call — projections,
+    biases, qk-norm, and rope still run here, then the hook receives the
+    post-rope q/k/v. The explicit whole-model path passes the engine-routed
+    exchanges from :mod:`repro.models.parallel`; the flash path is bypassed
+    so the hook owns the entire score/softmax computation.
+    """
     dtype = x.dtype
     src = kv_x if kv_x is not None else x
 
@@ -309,7 +317,10 @@ def apply_attention(
             new_cache = {"k_upd": k_upd, "v_upd": v_upd}
 
     o = None
-    if (shard is not None and kv_x is None and causal and cache is not None
+    if attn_impl is not None:
+        o = attn_impl(q, k, v, causal=causal and kv_x is None,
+                      q_offset=q_offset)
+    elif (shard is not None and kv_x is None and causal and cache is not None
             and pos is None):
         # prefill: forward-only — VMEM-tiled Pallas flash kernel per shard
         o = _flash_sharded(q, k, v, shard=shard, causal=True)

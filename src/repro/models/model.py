@@ -26,10 +26,12 @@ class Model:
 
 
 def _decoder_apply(cfg):
-    def apply(params, batch, *, cache=None, shard=_noshard, remat="none"):
+    def apply(params, batch, *, cache=None, shard=_noshard, remat="none",
+              attn_impl=None, moe_impl=None):
         return transformer.apply(
             params, cfg, batch["tokens"], cache=cache,
-            patch_embeds=batch.get("patch_embeds"), shard=shard, remat=remat)
+            patch_embeds=batch.get("patch_embeds"), shard=shard, remat=remat,
+            attn_impl=attn_impl, moe_impl=moe_impl)
     return apply
 
 

@@ -34,15 +34,17 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.callsites import MOE_COMBINE, MOE_DISPATCH
 from repro.comm.engine import CollectiveEngine
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 
-# tuning-table callsite tags for the two expert exchanges: they are issued
-# back-to-back around the expert FFN, so measured winners may differ from an
-# isolated all-to-all's (the paired pattern autotune_mesh measures)
-DISPATCH_CALLSITE = "moe.dispatch"
-COMBINE_CALLSITE = "moe.combine"
+# tuning-table callsite tags for the two expert exchanges (from the central
+# repro.comm.callsites registry): they are issued back-to-back around the
+# expert FFN, so measured winners may differ from an isolated all-to-all's
+# (the paired pattern autotune_mesh measures)
+DISPATCH_CALLSITE = MOE_DISPATCH
+COMBINE_CALLSITE = MOE_COMBINE
 
 
 # ---------------------------------------------------------------------------
@@ -276,14 +278,80 @@ def apply_moe(p: dict, cfg: ModelConfig, x: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def moe_param_specs(p: dict, axis: str) -> dict:
+def moe_param_specs(p: dict, axis: str, *, scanned: bool = False) -> dict:
     """PartitionSpecs for an :func:`init_moe` pytree under the explicit
-    path: experts sharded over ``axis``, router/shared replicated."""
+    path: experts sharded over ``axis``, router/shared replicated.
+    ``scanned`` shifts the expert specs one dim right for block params that
+    carry a leading layer-scan (super-block) dim, (n_super, E, ...)."""
+    e_spec = P(None, axis) if scanned else P(axis)
     specs = {"router": P(),
-             "w_gate": P(axis), "w_in": P(axis), "w_out": P(axis)}
+             "w_gate": e_spec, "w_in": e_spec, "w_out": e_spec}
     if "shared" in p:
         specs["shared"] = {k: P() for k in p["shared"]}
     return specs
+
+
+def _explicit_body(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, axis: str,
+                   engine: CollectiveEngine, schedule: Optional[str] = None,
+                   nchunks=1) -> jnp.ndarray:
+    """The per-rank MoE layer (runs inside an enclosing ``shard_map``).
+
+    ``x`` is the local batch shard (B_loc, S, D); ``p`` holds the local
+    expert shard (E_loc experts) with the router/shared weights replicated.
+    Routing uses global expert ids, so the dispatch/combine exchanges and
+    the capacity bookkeeping match :func:`apply_moe` exactly.
+    """
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    B_loc, S, D = x.shape
+    C = _capacity(cfg, S)
+    dtype = x.dtype
+    probs, ids = route(p, cfg, x)  # router replicated: global expert ids
+    e_idx, c_idx, keep, _ = _dispatch_indices(ids, E, C)
+    tok = jnp.repeat(x, K, axis=1).reshape(B_loc, S * K, D)
+    buf = _scatter_dispatch(tok.astype(dtype), e_idx, c_idx, E, C)
+    buf = exchange_dispatch(buf, axis, engine, schedule=schedule,
+                            nchunks=nchunks)  # (B, E_loc, C, D)
+    y = _expert_ffn(p, buf, dtype)  # local experts only
+    w_buf = _combine_weights(probs, keep, e_idx, c_idx, E, C)
+
+    def weigh(strip, start):
+        # the per-strip combine compute: weight the landed capacity
+        # strip while the next strip is still on the wire
+        wsl = lax.dynamic_slice_in_dim(w_buf, start, strip.shape[2], 2)
+        return strip.astype(jnp.float32) * wsl[..., None]
+
+    y_w = exchange_combine(y, axis, engine, schedule=schedule,
+                           nchunks=nchunks, consume=weigh)
+    out = _combine_scatter(y_w, e_idx, c_idx, S, K, E, C).astype(dtype)
+    if cfg.shared_expert:
+        out = out + _shared_expert(p["shared"], x, dtype)
+    return out
+
+
+def make_moe_impl(cfg: ModelConfig, mesh, *, axis: str = "x",
+                  engine: Optional[CollectiveEngine] = None,
+                  schedule: Optional[str] = None, nchunks=1):
+    """``moe_impl(p, x)`` hook for the explicit whole-model path.
+
+    Unlike :func:`make_apply_moe_explicit` (which wraps one layer in its own
+    ``shard_map``), the returned hook is the bare per-rank body — the
+    transformer passes it via ``moe_impl=`` so the whole forward+backward
+    stays inside a single enclosing ``shard_map``. Expert shards ride the
+    param tree (specs from :func:`moe_param_specs` with ``scanned=True``).
+    """
+    n = mesh.shape[axis]
+    if cfg.num_experts % n:
+        raise ValueError(
+            f"num_experts={cfg.num_experts} must be divisible by the "
+            f"{axis!r} axis size {n} for the explicit expert-parallel "
+            f"exchange")
+    engine = engine or CollectiveEngine.for_mesh(mesh, schedule="auto")
+
+    def moe_impl(p, x):
+        return _explicit_body(p, cfg, x, axis=axis, engine=engine,
+                              schedule=schedule, nchunks=nchunks)
+
+    return moe_impl
 
 
 def make_apply_moe_explicit(cfg: ModelConfig, mesh, *, axis: str = "x",
@@ -309,7 +377,7 @@ def make_apply_moe_explicit(cfg: ModelConfig, mesh, *, axis: str = "x",
     ``all_to_all_tiles`` schedule and every chunk count.
     """
     n = mesh.shape[axis]
-    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    E = cfg.num_experts
     if E % n:
         raise ValueError(
             f"num_experts={E} must be divisible by the {axis!r} axis size "
@@ -317,30 +385,8 @@ def make_apply_moe_explicit(cfg: ModelConfig, mesh, *, axis: str = "x",
     engine = engine or CollectiveEngine.for_mesh(mesh, schedule="auto")
 
     def body(p, x):
-        B_loc, S, D = x.shape
-        C = _capacity(cfg, S)
-        dtype = x.dtype
-        probs, ids = route(p, cfg, x)  # router replicated: global expert ids
-        e_idx, c_idx, keep, _ = _dispatch_indices(ids, E, C)
-        tok = jnp.repeat(x, K, axis=1).reshape(B_loc, S * K, D)
-        buf = _scatter_dispatch(tok.astype(dtype), e_idx, c_idx, E, C)
-        buf = exchange_dispatch(buf, axis, engine, schedule=schedule,
-                                nchunks=nchunks)  # (B, E_loc, C, D)
-        y = _expert_ffn(p, buf, dtype)  # local experts only
-        w_buf = _combine_weights(probs, keep, e_idx, c_idx, E, C)
-
-        def weigh(strip, start):
-            # the per-strip combine compute: weight the landed capacity
-            # strip while the next strip is still on the wire
-            wsl = lax.dynamic_slice_in_dim(w_buf, start, strip.shape[2], 2)
-            return strip.astype(jnp.float32) * wsl[..., None]
-
-        y_w = exchange_combine(y, axis, engine, schedule=schedule,
-                               nchunks=nchunks, consume=weigh)
-        out = _combine_scatter(y_w, e_idx, c_idx, S, K, E, C).astype(dtype)
-        if cfg.shared_expert:
-            out = out + _shared_expert(p["shared"], x, dtype)
-        return out
+        return _explicit_body(p, cfg, x, axis=axis, engine=engine,
+                              schedule=schedule, nchunks=nchunks)
 
     def wrapped(p, x):
         fn = shard_map(body, mesh=mesh,

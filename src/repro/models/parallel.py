@@ -1,0 +1,185 @@
+"""Engine-routed attention exchanges for the explicit whole-model path.
+
+Inside the whole-model ``shard_map`` (:func:`repro.train.step.
+make_whole_model_train_step_explicit`) the residual stream stays
+batch-sharded over one mesh axis, and attention — whose score matrix
+couples every query to every key of the *same* batch row — needs a
+resharding exchange. Two modes cover the two classic layouts, every wire
+hop an explicit :class:`~repro.comm.engine.CollectiveEngine` call under a
+registered :mod:`~repro.comm.callsites` tag:
+
+* **tp** (head-parallel): q/k/v are exchanged from (B_loc, S, H, hd) to
+  (B, S, H_loc, hd) — an all-to-all that splits the head dim and gathers
+  the batch shards (``@tp.qkv``) — dense attention runs on the full batch
+  with local heads, and the inverse exchange (``@tp.out``) restores the
+  batch-sharded layout. GQA stays consistent: heads and KV heads are both
+  split contiguously, so local q head ``j`` maps to local kv head ``j//G``
+  exactly as in the unsharded computation. Math-identical to
+  :func:`repro.models.layers.attention` (pure data movement).
+
+* **sp** (sequence-parallel ring attention): q/k/v are exchanged to
+  (B, S_loc, H, hd) (``@sp.qkv``), then the K/V block circulates the ring
+  via bidirectional :meth:`~repro.comm.engine.CollectiveEngine.
+  ring_exchange` hops (``@sp.kv``) — after hop j a rank holds the blocks
+  of ranks r-j and r+j, so ``ceil((n-1)/2)`` hops cover all n blocks —
+  while an online softmax (the same accumulator as the blockwise path in
+  :func:`~repro.models.layers.attention`) folds each block in with global
+  positions for the causal mask. The inverse exchange (``@sp.out``)
+  restores the batch-sharded layout. Equal to the dense computation up to
+  softmax reassociation (~1e-6 in f32).
+
+Factories return ``attn_impl(q, k, v, *, causal, q_offset=0) -> o`` hooks
+that :func:`repro.models.layers.apply_attention` accepts via ``attn_impl=``
+— projections, biases, qk-norm, and rope all run *before* the hook (rope
+positions depend only on the sequence index, so applying it pre-exchange is
+exact in both modes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.callsites import SP_KV, SP_OUT, SP_QKV, TP_OUT, TP_QKV
+from repro.comm.engine import CollectiveEngine, schedules_for
+from repro.configs.base import ModelConfig
+from repro.models.layers import _gqa_out_einsum, _gqa_scores_einsum, attention
+
+ATTN_MODES = ("tp", "sp")
+
+
+def _engine_for(mesh, engine: Optional[CollectiveEngine]) -> CollectiveEngine:
+    return engine or CollectiveEngine.for_mesh(mesh, schedule="auto")
+
+
+def make_tp_attention(cfg: ModelConfig, mesh, *, axis: str = "x",
+                      engine: Optional[CollectiveEngine] = None,
+                      schedule: Optional[str] = None) -> Callable:
+    """Head-parallel attention hook: exchange heads out, batch in.
+
+    Requires ``num_heads`` and ``num_kv_heads`` divisible by the axis size
+    (GQA keeps separate q and kv head counts, hence three forward
+    exchanges). The result is bit-equivalent to local dense attention —
+    the exchanges only relocate whole heads.
+    """
+    n = mesh.shape[axis]
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    if H % n or KV % n:
+        raise ValueError(
+            f"num_heads={H} and num_kv_heads={KV} must be divisible by the "
+            f"{axis!r} axis size {n} for the head-parallel (tp) exchange")
+    engine = _engine_for(mesh, engine)
+
+    def attn_impl(q, k, v, *, causal: bool = True, q_offset=0):
+        def gather_heads(t):  # (B_loc, S, H, hd) -> (B, S, H_loc, hd)
+            return engine.all_to_all_tiles(t, axis, split_axis=2,
+                                           concat_axis=0, schedule=schedule,
+                                           callsite=TP_QKV)
+        o = attention(gather_heads(q), gather_heads(k), gather_heads(v),
+                      causal=causal, q_offset=q_offset)
+        return engine.all_to_all_tiles(o, axis, split_axis=0, concat_axis=2,
+                                       schedule=schedule, callsite=TP_OUT)
+
+    return attn_impl
+
+
+def make_sp_attention(cfg: ModelConfig, mesh, *, axis: str = "x",
+                      engine: Optional[CollectiveEngine] = None,
+                      schedule: Optional[str] = None) -> Callable:
+    """Sequence-parallel ring-attention hook.
+
+    Requires the sequence length divisible by the axis size (checked at
+    trace time — shapes are static). ``schedule`` overrides the a2a
+    exchanges; the kv rotation only honors it when the name is registered
+    for ``ring_exchange`` (an a2a-only name like ``native`` falls back to
+    the engine-wide resolution instead of erroring).
+    """
+    n = mesh.shape[axis]
+    engine = _engine_for(mesh, engine)
+    rx_schedule = schedule if schedule in schedules_for("ring_exchange") \
+        else None
+
+    def attn_impl(q, k, v, *, causal: bool = True, q_offset=0):
+        B_loc, S, H, hd = q.shape
+        if S % n:
+            raise ValueError(
+                f"sequence length {S} must be divisible by the {axis!r} "
+                f"axis size {n} for the sequence-parallel (sp) exchange")
+
+        def gather_seq(t):  # (B_loc, S, H, hd) -> (B, S_loc, H, hd)
+            return engine.all_to_all_tiles(t, axis, split_axis=1,
+                                           concat_axis=0, schedule=schedule,
+                                           callsite=SP_QKV)
+        qs, ks, vs = gather_seq(q), gather_seq(k), gather_seq(v)
+        B, S_loc = qs.shape[0], S // n
+        KV = ks.shape[2]
+        G = H // KV
+        r = lax.axis_index(axis)
+        scale = 1.0 / math.sqrt(hd)
+        qg = (qs * scale).reshape(B, S_loc, KV, G, hd)
+        q_pos = q_offset + r * S_loc + jnp.arange(S_loc)
+
+        def fold(carry, kblk, vblk, kv_start):
+            # one online-softmax step over a ring block (same accumulator
+            # as the blockwise path in layers.attention, global positions)
+            acc, m, l = carry
+            s = _gqa_scores_einsum(qg, kblk)  # (B, KV, G, S_loc, S_loc) f32
+            if causal:
+                kv_pos = kv_start + jnp.arange(S_loc)
+                valid = kv_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(valid[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            p = jnp.exp(s - m_safe[..., None])
+            if causal:
+                p = jnp.where(valid[None, None, None], p, 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_blk = _gqa_out_einsum(p, vblk)
+            acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + o_blk
+            return acc_new, m_new, l_new
+
+        carry = (jnp.zeros((B, S_loc, KV, G, hd), jnp.float32),
+                 jnp.full((B, KV, G, S_loc), -jnp.inf, jnp.float32),
+                 jnp.zeros((B, KV, G, S_loc), jnp.float32))
+        carry = fold(carry, ks, vs, r * S_loc)  # local block first
+
+        # the kv block rides both ring directions at once: after hop j the
+        # fwd buffer holds rank r-j's block and the bwd buffer rank r+j's,
+        # so n//2 hops visit all n blocks (at j == n-j both name the same
+        # source — fold only one)
+        kv = jnp.concatenate([ks, vs], axis=-1)
+        fwd = bwd = kv
+        for j in range(1, n // 2 + 1):
+            fwd, bwd = engine.ring_exchange(fwd, bwd, axis,
+                                            schedule=rx_schedule,
+                                            callsite=SP_KV)
+            carry = fold(carry, fwd[..., :hd], fwd[..., hd:],
+                         ((r - j) % n) * S_loc)
+            if j != n - j:
+                carry = fold(carry, bwd[..., :hd], bwd[..., hd:],
+                             ((r + j) % n) * S_loc)
+
+        acc, m, l = carry
+        l = jnp.maximum(l, 1e-20)
+        o = (acc / l.transpose(0, 3, 1, 2)[..., None]) \
+            .reshape(B, S_loc, H, hd).astype(qs.dtype)
+        return engine.all_to_all_tiles(o, axis, split_axis=0, concat_axis=1,
+                                       schedule=schedule, callsite=SP_OUT)
+
+    return attn_impl
+
+
+def make_attn_impl(mode: str, cfg: ModelConfig, mesh, *, axis: str = "x",
+                   engine: Optional[CollectiveEngine] = None,
+                   schedule: Optional[str] = None) -> Callable:
+    """Dispatch on ``mode`` in :data:`ATTN_MODES` (``"tp"`` / ``"sp"``)."""
+    if mode == "tp":
+        return make_tp_attention(cfg, mesh, axis=axis, engine=engine,
+                                 schedule=schedule)
+    if mode == "sp":
+        return make_sp_attention(cfg, mesh, axis=axis, engine=engine,
+                                 schedule=schedule)
+    raise ValueError(f"unknown attention mode {mode!r}; modes: {ATTN_MODES}")

@@ -118,11 +118,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -
 
 def _apply_layer(lp: Dict, cfg: ModelConfig, x, *, kind: str, has_moe: bool,
                  has_cross: bool, cache, pos, cross_kv, shard: Shard,
-                 aux: Optional[dict]):
+                 aux: Optional[dict], attn_impl=None, moe_impl=None):
     h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
     if kind == "attn":
         a, new_cache = L.apply_attention(lp["attn"], cfg, h, cache=cache,
-                                         pos=pos, shard=shard)
+                                         pos=pos, shard=shard,
+                                         attn_impl=attn_impl)
     else:
         a, new_cache = SSM.apply_ssm(lp["ssm"], cfg, h, cache=cache, pos=pos)
     x = shard(x + a, "residual")
@@ -135,8 +136,11 @@ def _apply_layer(lp: Dict, cfg: ModelConfig, x, *, kind: str, has_moe: bool,
 
     if has_moe:
         h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
-        x = shard(x + MOE.apply_moe(lp["moe"], cfg, h, aux=aux, shard=shard),
-                  "residual")
+        if moe_impl is not None:
+            m = moe_impl(lp["moe"], h)
+        else:
+            m = MOE.apply_moe(lp["moe"], cfg, h, aux=aux, shard=shard)
+        x = shard(x + m, "residual")
     elif cfg.d_ff:
         h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
         x = shard(x + L.apply_mlp(lp["mlp"], h), "residual")
@@ -153,12 +157,20 @@ def apply(
     shard: Shard = _noshard,
     remat: str = "none",
     collect_aux: bool = False,
+    attn_impl=None,
+    moe_impl=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict], Optional[Dict]]:
     """Returns (logits, new_cache, aux).
 
     train:   cache=None                  -> logits (B, S, V)
     prefill: cache at pos 0              -> logits (B, S, V), cache filled
     decode:  cache with pos>0, S == 1    -> logits (B, 1, V), cache advanced
+
+    ``attn_impl`` / ``moe_impl`` are the explicit whole-model hooks: inside
+    a ``shard_map`` body they replace the self-attention core and the MoE
+    layer with engine-routed equivalents (:mod:`repro.models.parallel`,
+    :func:`repro.models.moe.make_moe_impl`). Every other op is identical,
+    so the traced math matches the GSPMD program exactly.
     """
     period = period_of(cfg)
     kinds = cfg.layer_kinds()
@@ -192,7 +204,8 @@ def apply(
                 lps[kp], cfg, x, kind=kinds[p_idx], has_moe=moe_mask[p_idx],
                 has_cross=cross_mask[p_idx],
                 cache=lcaches[kp] if lcaches is not None else None,
-                pos=pos, cross_kv=cross_kv, shard=shard, aux=None)
+                pos=pos, cross_kv=cross_kv, shard=shard, aux=None,
+                attn_impl=attn_impl, moe_impl=moe_impl)
             new_caches[kp] = nc if nc is not None else ()
         return x, new_caches
 

@@ -30,6 +30,7 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models.model import Model, build_model
 from repro.train.step import (TrainState, init_train_state, make_train_step,
+                              make_whole_model_train_step_explicit,
                               shard_state, state_specs)
 from repro.train.straggler import StepTimer, StragglerMonitor
 
@@ -42,6 +43,10 @@ class TrainLoopConfig:
     log_every: int = 10
     fail_at_step: Optional[int] = None  # crash injection (tests)
     zero1: bool = True
+    # "gspmd" (production jit path) | "explicit_tp" | "explicit_sp": the
+    # explicit modes run the whole forward+backward inside one shard_map
+    # with engine-routed collectives (make_whole_model_train_step_explicit)
+    step_mode: str = "gspmd"
 
 
 class InjectedFailure(RuntimeError):
@@ -77,11 +82,23 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
             state = trees["state"]
             log.info("resumed from checkpoint step %d", start_step)
 
-    if mesh is not None and start_step == 0:
-        state = shard_state(state, mesh, zero1=loop_cfg.zero1)
-
-    step_fn = make_train_step(model, run_cfg, mesh or jax.sharding.Mesh(
-        np.array(jax.devices()[:1]), ("x",)), total_steps=loop_cfg.steps)
+    explicit = loop_cfg.step_mode != "gspmd"
+    if explicit:
+        # whole-model explicit path: the step's own shard_map in_specs place
+        # the state (experts sharded, rest replicated) — no GSPMD shard_state
+        if loop_cfg.step_mode not in ("explicit_tp", "explicit_sp"):
+            raise ValueError(f"unknown step_mode {loop_cfg.step_mode!r}; "
+                             "use 'gspmd', 'explicit_tp', or 'explicit_sp'")
+        if mesh is None:
+            raise ValueError("explicit step_mode requires a mesh")
+        step_fn = make_whole_model_train_step_explicit(
+            model, run_cfg, mesh, attn_mode=loop_cfg.step_mode[len("explicit_"):],
+            total_steps=loop_cfg.steps)
+    else:
+        if mesh is not None and start_step == 0:
+            state = shard_state(state, mesh, zero1=loop_cfg.zero1)
+        step_fn = make_train_step(model, run_cfg, mesh or jax.sharding.Mesh(
+            np.array(jax.devices()[:1]), ("x",)), total_steps=loop_cfg.steps)
 
     monitor = StragglerMonitor(deadline_factor=run_cfg.step_deadline_factor,
                                policy="checkpoint")
@@ -90,7 +107,7 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
     for step in range(start_step, loop_cfg.steps):
         batch_np = dataset.batch(step)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        if mesh is not None:
+        if mesh is not None and not explicit:
             rules = sh.rules_for(mesh)
             bspec = sh.batch_specs(batch, rules, mesh)
             batch = {k: jax.device_put(v, jax.NamedSharding(mesh, bspec[k]))

@@ -29,11 +29,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as sh
 from repro.comm import compression
+from repro.comm.callsites import DP_GRADS
 from repro.comm.engine import CollectiveEngine
 from repro.comm.types import CommunicationType, comm_type
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig
+from repro.models import moe as MOE
 from repro.models.model import Model, next_token_loss
+from repro.models.parallel import make_attn_impl
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
                                clip_by_global_norm, make_lr_schedule)
 
@@ -166,7 +169,7 @@ def shard_state(state: TrainState, mesh: Mesh, *, zero1: bool = True,
 # tuning-table callsite tag for the bucketed gradient reduction: buckets are
 # issued back-to-back against the remaining backward compute, so a measured
 # ``allreduce@dp.grads`` table entry wins over the isolated-allreduce entry
-GRADS_CALLSITE = "dp.grads"
+GRADS_CALLSITE = DP_GRADS
 
 
 def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
@@ -257,6 +260,151 @@ def make_dp_train_step_explicit(model: Model, run_cfg: RunConfig, mesh: Mesh,
         metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
         fn = shard_map(
             step_body, mesh=mesh,
+            in_specs=(st_spec, batch_spec),
+            out_specs=(st_spec, metrics_spec),
+            check_vma=False)
+        return fn(state, batch)
+
+    return jax.jit(wrapped, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# whole-model explicit step: full forward+backward inside one shard_map
+# ---------------------------------------------------------------------------
+
+
+def whole_model_param_specs(params: Dict, axis: str = "x") -> Dict:
+    """PartitionSpecs for the explicit whole-model step: everything
+    replicated except MoE expert weights, which are sharded over ``axis``
+    (the leading dim after the super-block scan dim —
+    :func:`repro.models.moe.moe_param_specs` with ``scanned=True``)."""
+    specs = jax.tree.map(lambda _: P(), params)
+    for kp, blk in params["blocks"].items():
+        if "moe" in blk:
+            specs["blocks"][kp]["moe"] = MOE.moe_param_specs(
+                blk["moe"], axis, scanned=True)
+    return specs
+
+
+_IS_SPEC = lambda x: isinstance(x, P)  # noqa: E731 — P() flattens to nothing otherwise
+
+
+def make_whole_model_train_step_explicit(
+        model: Model, run_cfg: RunConfig, mesh: Mesh, *, axis: str = "x",
+        attn_mode: str = "tp", adamw: Optional[AdamWConfig] = None,
+        schedule_kind: str = "auto", nchunks=1,
+        bucket_bytes: Optional[int] = None,
+        total_steps: int = 10_000) -> Callable:
+    """Whole-model engine-routed step: the full forward+backward runs
+    inside ONE ``shard_map`` over ``axis``, every wire hop an explicit
+    :class:`~repro.comm.engine.CollectiveEngine` call under a registered
+    callsite tag (see :mod:`repro.comm.callsites`):
+
+    * attention activations are exchanged per layer via the ``attn_mode``
+      hook from :mod:`repro.models.parallel` — head-parallel (``tp``,
+      ``@tp.qkv``/``@tp.out``) or sequence-parallel ring attention (``sp``,
+      ``@sp.qkv``/``@sp.kv``/``@sp.out``);
+    * MoE dispatch/combine keep ``@moe.dispatch``/``@moe.combine`` with
+      experts sharded across ranks in the *param tree* (``nchunks``
+      pipelines the capacity strips exactly as in the single-layer path);
+    * data-parallel gradient buckets keep ``allreduce @ dp.grads``.
+
+    Gradient semantics: the residual stream is batch-sharded, so the local
+    backward already yields *complete* gradients for expert-sharded leaves
+    (the dispatch/combine transposes aggregate the other ranks' terms) —
+    those are only rescaled by 1/ndev, never reduced — while replicated
+    leaves take the bucketed ``allreduce_tree``. The global-norm clip
+    mirrors :func:`repro.optim.adamw.clip_by_global_norm` but reduces the
+    expert-shard sum-of-squares across ranks first, so the clip scale (and
+    the reported ``grad_norm``) equals the GSPMD value.
+
+    Differences vs GSPMD (:func:`make_train_step`) are pure reassociation:
+    loss, gradients, and updated params match on the same mesh to float32
+    tolerance for every registered schedule and chunk count
+    (tests/dist/test_transformer.py).
+    """
+    cfg = model.cfg
+    if cfg.is_encoder_decoder:
+        raise ValueError("whole-model explicit step supports decoder-only "
+                         "models (encoder-decoder has no explicit path)")
+    if run_cfg.grad_compression != "none":
+        raise ValueError(
+            "whole-model explicit step does not support grad_compression="
+            f"{run_cfg.grad_compression!r}: the int8 error-feedback path "
+            "reduces leaf-wise and cannot skip the expert-sharded leaves")
+    adamw = adamw or AdamWConfig(lr=run_cfg.learning_rate,
+                                 weight_decay=run_cfg.weight_decay,
+                                 max_grad_norm=run_cfg.max_grad_norm)
+    schedule = make_lr_schedule(adamw.lr, run_cfg.warmup_steps, total_steps)
+    engine = CollectiveEngine.for_mesh(mesh, comm_type(run_cfg.comm_type),
+                                       schedule_kind)
+    ndev = mesh.shape[axis]
+    # schedule=None: the hooks inherit the engine-wide resolution (auto via
+    # the cost model, or the engine's explicit schedule_kind)
+    attn_impl = make_attn_impl(attn_mode, cfg, mesh, axis=axis, engine=engine)
+    moe_impl = None
+    if cfg.has_moe:
+        moe_impl = MOE.make_moe_impl(cfg, mesh, axis=axis, engine=engine,
+                                     nchunks=nchunks)
+
+    def loss_fn(params, batch):
+        logits, _, _ = model.apply(params, batch, remat=run_cfg.remat,
+                                   attn_impl=attn_impl, moe_impl=moe_impl)
+        return next_token_loss(logits, batch["tokens"])
+
+    def step_body(state: TrainState, batch, *, param_spec):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        # Mean over DP ranks. Expert-sharded leaves already carry the full
+        # cross-rank sum (the collective transposes of dispatch/combine
+        # aggregate every rank's contribution), so they are only rescaled;
+        # replicated leaves ride the bucketed reduction.
+        g_leaves, treedef = jax.tree.flatten(grads)
+        s_leaves = jax.tree.flatten(param_spec, is_leaf=_IS_SPEC)[0]
+        scaled = [g.astype(jnp.float32) / ndev for g in g_leaves]
+        rep = {str(i): g for i, (g, s) in enumerate(zip(scaled, s_leaves))
+               if s == P()}
+        rep = engine.allreduce_tree(rep, axis, bucket_bytes=bucket_bytes,
+                                    callsite=GRADS_CALLSITE)
+        merged = [rep[str(i)] if str(i) in rep else g
+                  for i, g in enumerate(scaled)]
+        loss = engine.allreduce(loss / ndev, axis)
+
+        # Global-norm clip, sharding-aware: expert-shard sumsq needs a
+        # cross-rank psum; replicated leaves are identical post-allreduce,
+        # so their sumsq is local. Same formula as clip_by_global_norm.
+        rep_sq = sum(jnp.sum(jnp.square(g)) for g, s in
+                     zip(merged, s_leaves) if s == P())
+        shard_sq = sum(jnp.sum(jnp.square(g)) for g, s in
+                      zip(merged, s_leaves) if s != P())
+        if not isinstance(shard_sq, int):  # any expert-sharded leaves?
+            rep_sq = rep_sq + engine.allreduce(shard_sq, axis)
+        gnorm = jnp.sqrt(rep_sq)
+        scale = jnp.minimum(1.0, adamw.max_grad_norm /
+                            jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.unflatten(treedef, [g * scale for g in merged])
+
+        lr = schedule(state.step)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params,
+                                           adamw, lr)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1, error=state.error)
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    def wrapped(state, batch):
+        pspec = whole_model_param_specs(state.params, axis)
+        st_spec = TrainState(
+            params=pspec,
+            opt={"mu": jax.tree.map(lambda s: s, pspec, is_leaf=_IS_SPEC),
+                 "nu": jax.tree.map(lambda s: s, pspec, is_leaf=_IS_SPEC),
+                 "count": P()},
+            step=P(),
+            error=None,
+        )
+        batch_spec = {k: P(axis) for k in batch}
+        metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+        fn = shard_map(
+            partial(step_body, param_spec=pspec), mesh=mesh,
             in_specs=(st_spec, batch_spec),
             out_specs=(st_spec, metrics_spec),
             check_vma=False)

@@ -1,0 +1,126 @@
+"""Doc-layer drift gates.
+
+Two guarantees, both cheap and fully offline:
+
+* the README's "Callsite tag registry" table is a faithful rendering of
+  :data:`repro.comm.callsites.CALLSITES` — same tags, same ops, same
+  owning modules, pairing claims that exist in :mod:`repro.comm.autotune`
+  — and every constant really is imported and used by its owning module;
+* every relative markdown link and anchor in README.md / ROADMAP.md /
+  docs/*.md resolves (tools/check_md_links.py).
+"""
+from __future__ import annotations
+
+import importlib
+import importlib.util
+import inspect
+import os
+import re
+
+from repro.comm import callsites as CS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(REPO, "README.md")
+
+
+# ---------------------------------------------------------------------------
+# README table <-> CALLSITES
+# ---------------------------------------------------------------------------
+
+
+def _registry_table_rows():
+    """Parse the '### Callsite tag registry' table into
+    {tag: (op, module, pairing_cell)}."""
+    with open(README, encoding="utf-8") as f:
+        text = f.read()
+    m = re.search(r"#+\s*Callsite tag registry(.*?)(?:\n#|\Z)", text,
+                  re.DOTALL)
+    assert m, "README is missing the 'Callsite tag registry' section"
+    rows = {}
+    for line in m.group(1).splitlines():
+        if not line.strip().startswith("|"):
+            continue
+        cells = [c.strip().strip("`") for c in line.strip().strip("|")
+                 .split("|")]
+        if len(cells) < 4 or cells[0] in ("tag", "") or set(cells[0]) <= {"-"}:
+            continue
+        rows[cells[0]] = (cells[1], cells[2], cells[3])
+    return rows
+
+
+def test_readme_table_matches_registry():
+    rows = _registry_table_rows()
+    assert set(rows) == set(CS.CALLSITES), (
+        f"README table rows {sorted(rows)} != registry tags "
+        f"{sorted(CS.CALLSITES)}")
+    for tag, (op, module, pairing) in rows.items():
+        cs = CS.CALLSITES[tag]
+        assert op == cs.op, (tag, op, cs.op)
+        assert module == cs.module, (tag, module, cs.module)
+        if cs.tuned is None:
+            assert "fallback" in pairing or "untagged" in pairing, (
+                f"{tag}: registry says untagged fallback, table says "
+                f"{pairing!r}")
+        else:
+            assert cs.tuned in pairing, (
+                f"{tag}: table pairing {pairing!r} does not name the "
+                f"measured pattern {cs.tuned!r}")
+
+
+def test_constants_used_by_owning_modules():
+    """Each tag's constant is imported from repro.comm.callsites by its
+    owning module and actually used there — a renamed or orphaned tag
+    fails here, not silently at tuning time."""
+    for tag, cs in CS.CALLSITES.items():
+        assert getattr(CS, cs.const) == tag, (cs.const, tag)
+        mod = importlib.import_module(cs.module)
+        src = inspect.getsource(mod)
+        assert re.search(r"from repro\.comm\.callsites import", src), (
+            f"{cs.module} does not import from repro.comm.callsites")
+        assert re.search(rf"\b{cs.const}\b", src), (
+            f"constant {cs.const} ({tag!r}) unused in {cs.module}")
+        assert f'"{tag}"' not in src.replace(f'"{cs.op}@{tag}"', ""), (
+            f"{cs.module} inlines the literal {tag!r} instead of "
+            f"using {cs.const}")
+
+
+def test_tuned_patterns_exist_in_autotune():
+    """Every `tuned` claim maps to a real autotune pattern: the key is in
+    autotune_mesh's default op list, and when a tag inherits a paired
+    measurement, PAIRED_ALIASES really aliases it."""
+    from repro.comm.autotune import PAIRED_ALIASES, autotune_mesh
+
+    default_ops = inspect.signature(autotune_mesh).parameters["ops"].default
+    for tag, cs in CS.CALLSITES.items():
+        if cs.tuned is None:
+            continue
+        assert cs.tuned in default_ops, (
+            f"{tag}: measured pattern {cs.tuned!r} is not in "
+            f"autotune_mesh's default ops {default_ops}")
+        own_key = f"{cs.op}@{tag}"
+        if cs.tuned != own_key:
+            assert own_key in PAIRED_ALIASES.get(cs.tuned, ()), (
+                f"{tag}: inherits {cs.tuned!r} but PAIRED_ALIASES does "
+                f"not alias {own_key!r} to it")
+
+
+# ---------------------------------------------------------------------------
+# markdown links
+# ---------------------------------------------------------------------------
+
+
+def _load_checker():
+    path = os.path.join(REPO, "tools", "check_md_links.py")
+    spec = importlib.util.spec_from_file_location("check_md_links", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_markdown_links_resolve():
+    checker = _load_checker()
+    problems = []
+    for f in checker.default_files():
+        problems += [(os.path.relpath(f, REPO), link, why)
+                     for link, why in checker.check_file(f)]
+    assert not problems, f"broken markdown links: {problems}"

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for the repo's doc layer.
+
+Verifies, without any network access:
+
+* every relative link target (``[x](docs/ARCHITECTURE.md)``,
+  ``[y](../README.md#anchor)``) exists on disk relative to the file
+  containing the link;
+* every anchor (``#section-name``, same-file or cross-file) matches a
+  heading in the target file, using GitHub's slug rules (lowercase,
+  punctuation stripped, spaces to dashes);
+* ``http(s)://`` and ``mailto:`` links are skipped (no network in CI).
+
+Run directly (``python tools/check_md_links.py [files...]``; defaults to
+README.md, ROADMAP.md, and docs/*.md from the repo root) or through
+``tests/test_docs.py``. Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+from typing import List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — ignore images' leading ! by just not caring about it;
+# the target existence check is identical
+_LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: strip markup/punctuation, lowercase,
+    spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = _CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(h) for h in _HEADING_RE.findall(text)}
+
+
+def links_of(md_path: str) -> List[str]:
+    with open(md_path, encoding="utf-8") as f:
+        text = _CODE_FENCE_RE.sub("", f.read())
+    return _LINK_RE.findall(text)
+
+
+def check_file(md_path: str) -> List[Tuple[str, str]]:
+    """Returns (link, problem) pairs for every broken link in ``md_path``."""
+    problems = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for link in links_of(md_path):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = link.partition("#")
+        target = (os.path.normpath(os.path.join(base, path_part))
+                  if path_part else os.path.abspath(md_path))
+        if not os.path.exists(target):
+            problems.append((link, f"target does not exist: {target}"))
+            continue
+        if anchor and target.endswith(".md"):
+            found = anchors_of(target)
+            if anchor not in found:
+                problems.append(
+                    (link, f"anchor #{anchor} not among headings of "
+                           f"{os.path.relpath(target, REPO)} "
+                           f"(have: {sorted(found)})"))
+    return problems
+
+
+def default_files() -> List[str]:
+    files = [os.path.join(REPO, "README.md"), os.path.join(REPO, "ROADMAP.md")]
+    files += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def main(argv: List[str]) -> int:
+    files = argv or default_files()
+    bad = 0
+    for f in files:
+        for link, problem in check_file(f):
+            print(f"{os.path.relpath(f, REPO)}: [{link}] {problem}")
+            bad += 1
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not bad else f'{bad} broken link(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
