@@ -39,6 +39,11 @@ One module per paper table/figure (DESIGN.md §6):
                    moe.dispatch / moe.combine / dp.grads schedules and
                    exits 1 if any is unregistered — the --autotune gate)
   overlap_bench    Figs. 5/7 analogue (lookahead HPL + bucketed reduction)
+  serve_bench      beyond-paper continuous-batching serving loop: paged-KV
+                   explicit-vs-GSPMD decode parity + tokens/sec and p50/p99
+                   per-token latency vs batch size (records the resolved
+                   decode.qkv / decode.out / decode.moe schedules and exits
+                   1 if any is unregistered — the --autotune gate)
 """
 from __future__ import annotations
 
@@ -59,6 +64,7 @@ MODULES = [
     "resource_table",
     "lm_step_bench",
     "overlap_bench",
+    "serve_bench",
 ]
 
 ALIASES = {
@@ -67,6 +73,7 @@ ALIASES = {
     "beff": "beff_bandwidth",
     "overlap": "overlap_bench",
     "lm": "lm_step_bench",
+    "serve": "serve_bench",
 }
 
 # primary collective op per module: --sweep-schedules runs the module once
@@ -83,6 +90,9 @@ SWEEP_OPS = {
     # engine — the sweep exercises every registered all_to_all_tiles schedule
     "lm_step_bench": "all_to_all_tiles",
     "overlap_bench": "allreduce",
+    # the decode.qkv/decode.out/decode.moe exchanges are all_to_all_tiles:
+    # the sweep reruns the serving loop once per registered schedule
+    "serve_bench": "all_to_all_tiles",
 }
 
 # modules with a software-pipeline dimension: --sweep-schedules also runs

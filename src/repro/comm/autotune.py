@@ -708,6 +708,38 @@ def _measure_op(mesh, op: str, nbytes: int, schedule: str,
         _, t = timeit(fn, x, reps=reps, warmup=1)
         return t
 
+    if op == "all_to_all_tiles@decode.qkv":
+        # per-token decode pattern: q and the token's k/v ride three tiny
+        # head-gathering exchanges, single-query attention against the page
+        # pool runs between them, the inverse exchange restores the batch
+        # layout, and the MoE dispatch/FFN/combine pair follows — six
+        # back-to-back latency-bound exchanges, the serving burst an
+        # isolated (training-sized) all-to-all measurement misses. Sized by
+        # the decode ladder in :func:`autotune_mesh`, not the default one.
+        L = max(elems // nranks, 1)
+        x = jnp.asarray(np.ones((nranks, nranks, L), np.float32))
+        pool = jnp.asarray(np.ones((nranks, 8, L), np.float32))
+        spec = P(names[0], None, None)
+
+        def body(t, pg_):
+            def gather(a):  # heads split out, batch gathered
+                return engine.all_to_all_tiles(a, names[0], split_axis=1,
+                                               concat_axis=0)
+            q, k, v = gather(t), gather(t * 0.5), gather(t * 0.25)
+            s = jax.nn.softmax(q * pg_[:, :1] + k, axis=-1)  # paged attn
+            o = engine.all_to_all_tiles(s * v, names[0], split_axis=0,
+                                        concat_axis=1)
+            buf = engine.all_to_all_tiles(o, names[0], split_axis=1,
+                                          concat_axis=0)  # moe dispatch
+            buf = jax.nn.silu(buf) * buf  # stand-in expert FFN
+            return engine.all_to_all_tiles(buf, names[0], split_axis=0,
+                                           concat_axis=1)  # moe combine
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, x, pool, reps=reps, warmup=1)
+        return t
+
     if op == "grid_transpose":
         pg = mesh.shape[names[0]]
         side = max(int(math.sqrt(elems)), 1)
@@ -746,7 +778,15 @@ PAIRED_ALIASES: Dict[str, Tuple[str, ...]] = {
     "all_to_all_tiles@moe.dispatch": ("all_to_all_tiles@moe.combine",),
     "all_to_all_tiles@tp.qkv": ("all_to_all_tiles@tp.out",),
     "all_to_all_tiles@sp.qkv": ("all_to_all_tiles@sp.out",),
+    "all_to_all_tiles@decode.qkv": ("all_to_all_tiles@decode.out",
+                                    "all_to_all_tiles@decode.moe"),
 }
+
+# the per-token decode pattern is measured at decode-sized payloads (one
+# token's q/k/v across the whole batch is a few KiB) instead of the
+# training-sized default ladder — serving lives in the latency band
+DECODE_SIZES = (1 << 8, 1 << 11, 1 << 14)
+DECODE_SIZES_QUICK = (1 << 8, 1 << 12)
 
 # callsite patterns measured on the square torus (HPL's row/column
 # broadcasts); everything else — including the MoE paired exchange — runs
@@ -760,7 +800,8 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                                            "bcast@hpl.panel",
                                            "all_to_all_tiles@moe.dispatch",
                                            "all_to_all_tiles@tp.qkv",
-                                           "all_to_all_tiles@sp.qkv"),
+                                           "all_to_all_tiles@sp.qkv",
+                                           "all_to_all_tiles@decode.qkv"),
                   sizes: Optional[Sequence[int]] = None, reps: int = 3,
                   quick: bool = False, verbose: bool = True
                   ) -> Tuple[TuningTable, Dict]:
@@ -783,14 +824,20 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     ``"all_to_all_tiles@sp.qkv"`` the seq-gathering exchanges interleaved
     with the ring-attention kv hops (winner aliased to ``@sp.out``; the
     hops themselves fall back to the untagged ``ring_exchange`` entry).
-    Returns ``(table, record)`` where ``record`` holds the raw per-(op,
-    schedule, size) timings for the bench artifact."""
+    ``"all_to_all_tiles@decode.qkv"`` times one serving decode step's
+    six-exchange burst (q/k/v head gathers, paged attention, inverse, MoE
+    dispatch/combine) at decode-sized payloads — its own size ladder
+    (:data:`DECODE_SIZES`), since per-token messages sit far below the
+    training sizes; the winner lands under ``@decode.out`` and
+    ``@decode.moe`` too. Returns ``(table, record)`` where ``record`` holds
+    the raw per-(op, schedule, size) timings for the bench artifact."""
     import jax
 
     from repro.comm.engine import schedules_for
     from repro.comm.topology import MeshTopology
     from repro.compat import make_mesh
 
+    default_sizes = sizes is None
     if sizes is None:
         sizes = ((1 << 10, 1 << 16) if quick
                  else (1 << 10, 1 << 14, 1 << 18, 1 << 22))
@@ -823,8 +870,11 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
             extra_sigs = []
         names = [s for s in schedules_for(base_op)
                  if s not in LOSSY_SCHEDULES]
+        op_sizes = sizes
+        if default_sizes and op.endswith("@decode.qkv"):
+            op_sizes = DECODE_SIZES_QUICK if quick else DECODE_SIZES
         winners, measured_sizes = [], []
-        for S in sizes:
+        for S in op_sizes:
             times = {}
             for name in names:
                 try:

@@ -42,6 +42,9 @@ TP_OUT = "tp.out"                # head-parallel attention: inverse exchange
 SP_QKV = "sp.qkv"                # ring attention: q/k/v sequence split
 SP_KV = "sp.kv"                  # ring attention: per-step kv block rotation
 SP_OUT = "sp.out"                # ring attention: inverse exchange
+DECODE_QKV = "decode.qkv"        # per-token decode: q/k/v head split
+DECODE_OUT = "decode.out"        # per-token decode: inverse head exchange
+DECODE_MOE = "decode.moe"        # per-token decode: MoE dispatch+combine
 
 
 @dataclass(frozen=True)
@@ -84,4 +87,13 @@ CALLSITES: Dict[str, Callsite] = {
     SP_KV: Callsite("ring_exchange", "repro.models.parallel", "SP_KV"),
     SP_OUT: Callsite("all_to_all_tiles", "repro.models.parallel", "SP_OUT",
                      tuned="all_to_all_tiles@sp.qkv"),
+    DECODE_QKV: Callsite("all_to_all_tiles", "repro.models.parallel",
+                         "DECODE_QKV",
+                         tuned="all_to_all_tiles@decode.qkv"),
+    DECODE_OUT: Callsite("all_to_all_tiles", "repro.models.parallel",
+                         "DECODE_OUT",
+                         tuned="all_to_all_tiles@decode.qkv"),
+    DECODE_MOE: Callsite("all_to_all_tiles", "repro.train.serve",
+                         "DECODE_MOE",
+                         tuned="all_to_all_tiles@decode.qkv"),
 }

@@ -1,14 +1,21 @@
-"""Serving launcher: batched generation with prefill + decode steps.
+"""Serving launcher: continuous-batching generation over the paged cache.
 
 ``python -m repro.launch.serve --arch llama3-8b --requests 8``
 
-Serves the reduced config on local devices: builds a request batch, runs one
-prefill, then streams decode steps — the same two jitted functions the
-decode_* dry-run cells lower at production shapes.
+Serves the reduced config on local devices through
+:class:`repro.serve.ServeEngine`: requests with mixed prompt lengths are
+queued, admitted under a per-step prefill-token budget, prefilled into the
+paged KV cache, and decoded as one continuously-batched stream with slots
+recycled on EOS / max-new. ``--mode explicit`` routes the per-token
+collectives through the engine (``decode.*`` callsites) on an explicit
+``shard_map`` decode; ``--legacy`` keeps the old whole-batch
+``generate`` loop (and is the fallback for model families the paged cache
+does not cover).
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -20,19 +27,7 @@ from repro.models.model import build_model
 from repro.train.serve import generate
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    cfg = reduced(get_config(args.arch))
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-
+def _legacy(model, params, cfg, args):
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                        (args.requests, args.prompt_len)),
@@ -54,10 +49,93 @@ def main():
     dt = time.perf_counter() - t0
     new_tokens = args.requests * args.max_new
     print(f"arch={args.arch} batch={args.requests} prompt={args.prompt_len} "
-          f"new={args.max_new}")
+          f"new={args.max_new} [legacy generate]")
     print(f"generated {new_tokens} tokens in {dt:.2f}s "
           f"({new_tokens / dt:.1f} tok/s incl. compile)")
     print("first sequence:", np.asarray(out[0])[:args.prompt_len + 8])
+
+
+def _paged(model, params, cfg, args):
+    from repro.compat import make_mesh
+    from repro.models.kvcache import PagedCacheConfig
+    from repro.serve import ServeEngine
+
+    max_seq = args.prompt_len + args.max_new
+    slots = max(min(args.requests, len(jax.devices()) * 2), 1)
+    mesh = None
+    if args.mode == "explicit":
+        # The head/expert exchange needs the axis size to divide every
+        # exchanged dimension, so shrink the mesh to the largest divisor
+        # the reduced config supports.
+        n = math.gcd(len(jax.devices()), cfg.num_heads)
+        n = math.gcd(n, cfg.num_kv_heads)
+        if getattr(cfg, "num_experts", 0):
+            n = math.gcd(n, cfg.num_experts)
+        mesh = make_mesh((n,), ("x",))
+        slots = max(slots // n, 1) * n
+    pcfg = PagedCacheConfig(
+        page_size=args.page_size,
+        num_pages=slots * (-(-max_seq // args.page_size)) * 2,
+        max_slots=slots, max_seq=max_seq)
+    eng = ServeEngine(model, params, pcfg, mode=args.mode, mesh=mesh,
+                      schedule=args.schedule,
+                      prefill_token_budget=args.prefill_budget,
+                      eos_id=args.eos_id, temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=(int(rng.integers(args.prompt_len // 2,
+                                                   args.prompt_len + 1)),)
+                            ).astype(np.int32)
+               for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    out, stats = eng.run(prompts, max_new_tokens=args.max_new,
+                         collect_stats=True)
+    dt = time.perf_counter() - t0
+    new_tokens = sum(out[r].shape[0] - p.shape[0]
+                     for r, p in enumerate(prompts))
+    decode_steps = [s["decode_s"] for s in stats if s["decode_tokens"]]
+    print(f"arch={args.arch} mode={args.mode} requests={args.requests} "
+          f"slots={pcfg.max_slots} pages={pcfg.num_pages}x{pcfg.page_size}")
+    print(f"generated {new_tokens} tokens in {dt:.2f}s "
+          f"({new_tokens / dt:.1f} tok/s incl. compile) over "
+          f"{len(stats)} steps ({len(decode_steps)} decode batches)")
+    if decode_steps:
+        lat = np.sort(decode_steps)
+        print(f"decode-step latency p50={lat[len(lat) // 2] * 1e3:.2f}ms "
+              f"p99={lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3:.2f}ms")
+    print("first sequence:", out[0][:prompts[0].shape[0] + 8])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mode", choices=("gspmd", "explicit"), default="gspmd")
+    ap.add_argument("--schedule", default=None,
+                    help="override the decode collectives' schedule "
+                         "(explicit mode)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=512)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--legacy", action="store_true",
+                    help="whole-batch generate loop instead of the "
+                         "continuous-batching engine")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    paged_ok = (not cfg.is_encoder_decoder
+                and all(k == "attn" for k in cfg.layer_kinds()))
+    if args.legacy or not paged_ok:
+        _legacy(model, params, cfg, args)
+    else:
+        _paged(model, params, cfg, args)
 
 
 if __name__ == "__main__":

@@ -166,6 +166,34 @@ def attention(
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k: jnp.ndarray,  # (B, Smax, KV, hd) gathered pages, new token written
+    v: jnp.ndarray,  # (B, Smax, KV, hd)
+    *,
+    lengths: jnp.ndarray,  # (B,) int32: kv position of the newest token
+) -> jnp.ndarray:
+    """Single-token attention over gathered pages with per-row valid lengths.
+
+    Positions ``> lengths[b]`` are masked out (``lengths[b]`` itself is the
+    just-written token, so it participates). The mask fill is finite (no
+    ``-inf``) so fully-masked rows — inactive serving slots — produce
+    garbage instead of NaN; the server discards those rows.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Sq, KV, G, hd)
+    s = _gqa_scores_einsum(qg, k)  # (B, KV, G, Sq, Smax) f32
+    kv_pos = jnp.arange(k.shape[1])
+    mask = kv_pos[None, :] <= lengths[:, None]  # (B, Smax)
+    s = jnp.where(mask[:, None, None, None, :], s, jnp.finfo(s.dtype).min)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out_einsum(p, v)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Flash-attention path: Pallas kernel under shard_map (prefill/forward-only)
 # ---------------------------------------------------------------------------
@@ -254,12 +282,14 @@ def apply_attention(
     x: jnp.ndarray,  # (B, Sq, d_model)
     *,
     kv_x: Optional[jnp.ndarray] = None,  # cross-attn source (B, Skv, kv_in)
-    cache: Optional[dict] = None,  # {'k','v'} (B, Smax, KV, hd) + pos
-    pos=None,  # decode position scalar (traced ok)
+    cache: Optional[dict] = None,  # {'k','v'} (B, Smax, KV, hd) + pos,
+    # or a paged pool {'k_pages','v_pages'} (num_pages, ps, KV, hd)
+    pos=None,  # decode position scalar, or (B,) lengths for the paged path
     causal: bool = True,
     use_rope: bool = True,
     shard=None,  # activation-constraint callback (enables the flash path)
     attn_impl=None,  # explicit-path hook: (q, k, v, *, causal, q_offset) -> o
+    page_table=None,  # paged decode: {'block_table': (B, pmax), 'lengths': (B,)}
 ):
     """Returns (out, new_cache). ``cache`` is updated at ``pos`` in decode.
 
@@ -268,6 +298,13 @@ def apply_attention(
     post-rope q/k/v. The explicit whole-model path passes the engine-routed
     exchanges from :mod:`repro.models.parallel`; the flash path is bypassed
     so the hook owns the entire score/softmax computation.
+
+    When ``cache`` is a paged pool (``k_pages``/``v_pages``), ``page_table``
+    maps serving slots to pages and the new-cache return carries only the
+    token-sized ``k_upd``/``v_upd`` — the layer scan scatters them into the
+    pool. A hook with a truthy ``paged`` attribute takes over the whole
+    exchange + gather + attention (:func:`repro.models.parallel.
+    make_paged_decode_attention`).
     """
     dtype = x.dtype
     src = kv_x if kv_x is not None else x
@@ -287,6 +324,9 @@ def apply_attention(
     if use_rope and cfg.rope_theta > 0 and kv_x is None:
         if pos is None:
             positions = jnp.arange(x.shape[1])
+        elif getattr(pos, "ndim", 0) == 1:  # paged decode: per-row lengths
+            positions = pos[:, None] + jnp.arange(x.shape[1])
+            q_offset = pos
         else:
             positions = pos + jnp.arange(x.shape[1])
             q_offset = pos
@@ -295,6 +335,33 @@ def apply_attention(
         k = apply_rope(k, sin, cos)
     elif pos is not None:
         q_offset = pos
+
+    if cache is not None and "k_pages" in cache:
+        # paged decode: S == 1; the token update is NOT written here — the
+        # layer scan scatters k_upd/v_upd into the page pool (one scatter
+        # per buffer, same O(new tokens) HBM story as the dense merge)
+        if kv_x is not None:
+            raise ValueError("cross-attention KV is not cached here")
+        if page_table is None:
+            raise ValueError("paged cache requires page_table=")
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        k_upd, v_upd = k.astype(kp.dtype), v.astype(vp.dtype)
+        bt, lengths = page_table["block_table"], page_table["lengths"]
+        if attn_impl is not None and getattr(attn_impl, "paged", False):
+            o, k_upd, v_upd = attn_impl(q, k_upd, v_upd, pages_k=kp,
+                                        pages_v=vp, block_table=bt,
+                                        lengths=lengths)
+        else:
+            from repro.models.kvcache import gather_pages  # lazy: no cycle
+            gk = gather_pages(kp, bt)
+            gv = gather_pages(vp, bt)
+            b_idx = jnp.arange(q.shape[0])
+            gk = gk.at[b_idx, lengths].set(k_upd[:, 0], mode="drop")
+            gv = gv.at[b_idx, lengths].set(v_upd[:, 0], mode="drop")
+            o = decode_attention(q, gk.astype(dtype), gv.astype(dtype),
+                                 lengths=lengths)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype))
+        return out, {"k_upd": k_upd, "v_upd": v_upd}
 
     new_cache = None
     if cache is not None:

@@ -58,7 +58,8 @@ def _monolithic(nchunks) -> bool:
 
 def exchange_dispatch(buf: jnp.ndarray, axis: str, engine: CollectiveEngine,
                       *, schedule: Optional[str] = None, nchunks=1,
-                      consume=None) -> jnp.ndarray:
+                      consume=None, callsite: str = DISPATCH_CALLSITE
+                      ) -> jnp.ndarray:
     """Route a locally-built dispatch buffer to its expert owners.
 
     Inside ``shard_map`` over ``axis`` each rank holds tokens for *all*
@@ -73,16 +74,17 @@ def exchange_dispatch(buf: jnp.ndarray, axis: str, engine: CollectiveEngine,
     if consume is None and _monolithic(nchunks):
         return engine.all_to_all_tiles(buf, axis, split_axis=1,
                                        concat_axis=0, schedule=schedule,
-                                       callsite=DISPATCH_CALLSITE)
+                                       callsite=callsite)
     return engine.pipelined("all_to_all_tiles", buf, axis, nchunks=nchunks,
                             split_axis=2, tile_split_axis=1,
                             tile_concat_axis=0, consume=consume,
-                            schedule=schedule, callsite=DISPATCH_CALLSITE)
+                            schedule=schedule, callsite=callsite)
 
 
 def exchange_combine(buf: jnp.ndarray, axis: str, engine: CollectiveEngine,
                      *, schedule: Optional[str] = None, nchunks=1,
-                     consume=None) -> jnp.ndarray:
+                     consume=None, callsite: str = COMBINE_CALLSITE
+                     ) -> jnp.ndarray:
     """Inverse of :func:`exchange_dispatch`: return expert outputs
     (B, E_loc, C, D) to the token-owning ranks as (B_loc, E, C, D), tagged
     ``moe.combine``. Same pipelining knobs as dispatch — the combine
@@ -90,11 +92,11 @@ def exchange_combine(buf: jnp.ndarray, axis: str, engine: CollectiveEngine,
     if consume is None and _monolithic(nchunks):
         return engine.all_to_all_tiles(buf, axis, split_axis=0,
                                        concat_axis=1, schedule=schedule,
-                                       callsite=COMBINE_CALLSITE)
+                                       callsite=callsite)
     return engine.pipelined("all_to_all_tiles", buf, axis, nchunks=nchunks,
                             split_axis=2, tile_split_axis=0,
                             tile_concat_axis=1, consume=consume,
-                            schedule=schedule, callsite=COMBINE_CALLSITE)
+                            schedule=schedule, callsite=callsite)
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:
@@ -293,7 +295,8 @@ def moe_param_specs(p: dict, axis: str, *, scanned: bool = False) -> dict:
 
 def _explicit_body(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, axis: str,
                    engine: CollectiveEngine, schedule: Optional[str] = None,
-                   nchunks=1) -> jnp.ndarray:
+                   nchunks=1, dispatch_callsite: str = DISPATCH_CALLSITE,
+                   combine_callsite: str = COMBINE_CALLSITE) -> jnp.ndarray:
     """The per-rank MoE layer (runs inside an enclosing ``shard_map``).
 
     ``x`` is the local batch shard (B_loc, S, D); ``p`` holds the local
@@ -310,7 +313,8 @@ def _explicit_body(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, axis: str,
     tok = jnp.repeat(x, K, axis=1).reshape(B_loc, S * K, D)
     buf = _scatter_dispatch(tok.astype(dtype), e_idx, c_idx, E, C)
     buf = exchange_dispatch(buf, axis, engine, schedule=schedule,
-                            nchunks=nchunks)  # (B, E_loc, C, D)
+                            nchunks=nchunks,
+                            callsite=dispatch_callsite)  # (B, E_loc, C, D)
     y = _expert_ffn(p, buf, dtype)  # local experts only
     w_buf = _combine_weights(probs, keep, e_idx, c_idx, E, C)
 
@@ -321,7 +325,8 @@ def _explicit_body(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, axis: str,
         return strip.astype(jnp.float32) * wsl[..., None]
 
     y_w = exchange_combine(y, axis, engine, schedule=schedule,
-                           nchunks=nchunks, consume=weigh)
+                           nchunks=nchunks, consume=weigh,
+                           callsite=combine_callsite)
     out = _combine_scatter(y_w, e_idx, c_idx, S, K, E, C).astype(dtype)
     if cfg.shared_expert:
         out = out + _shared_expert(p["shared"], x, dtype)
@@ -330,7 +335,9 @@ def _explicit_body(p: dict, cfg: ModelConfig, x: jnp.ndarray, *, axis: str,
 
 def make_moe_impl(cfg: ModelConfig, mesh, *, axis: str = "x",
                   engine: Optional[CollectiveEngine] = None,
-                  schedule: Optional[str] = None, nchunks=1):
+                  schedule: Optional[str] = None, nchunks=1,
+                  dispatch_callsite: str = DISPATCH_CALLSITE,
+                  combine_callsite: str = COMBINE_CALLSITE):
     """``moe_impl(p, x)`` hook for the explicit whole-model path.
 
     Unlike :func:`make_apply_moe_explicit` (which wraps one layer in its own
@@ -349,7 +356,9 @@ def make_moe_impl(cfg: ModelConfig, mesh, *, axis: str = "x",
 
     def moe_impl(p, x):
         return _explicit_body(p, cfg, x, axis=axis, engine=engine,
-                              schedule=schedule, nchunks=nchunks)
+                              schedule=schedule, nchunks=nchunks,
+                              dispatch_callsite=dispatch_callsite,
+                              combine_callsite=combine_callsite)
 
     return moe_impl
 

@@ -42,10 +42,13 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 from jax import lax
 
-from repro.comm.callsites import SP_KV, SP_OUT, SP_QKV, TP_OUT, TP_QKV
+from repro.comm.callsites import (DECODE_OUT, DECODE_QKV, SP_KV, SP_OUT,
+                                  SP_QKV, TP_OUT, TP_QKV)
 from repro.comm.engine import CollectiveEngine, schedules_for
 from repro.configs.base import ModelConfig
-from repro.models.layers import _gqa_out_einsum, _gqa_scores_einsum, attention
+from repro.models.kvcache import gather_pages
+from repro.models.layers import (_gqa_out_einsum, _gqa_scores_einsum,
+                                 attention, decode_attention)
 
 ATTN_MODES = ("tp", "sp")
 
@@ -82,6 +85,57 @@ def make_tp_attention(cfg: ModelConfig, mesh, *, axis: str = "x",
         return engine.all_to_all_tiles(o, axis, split_axis=0, concat_axis=2,
                                        schedule=schedule, callsite=TP_OUT)
 
+    return attn_impl
+
+
+def make_paged_decode_attention(cfg: ModelConfig, mesh, *, axis: str = "x",
+                                engine: Optional[CollectiveEngine] = None,
+                                schedule: Optional[str] = None) -> Callable:
+    """Head-parallel paged-decode hook for the explicit serving path.
+
+    Per-token collectives are tiny — the latency band of the alpha-beta
+    model — so the exchanges carry their own ``decode.*`` tags and resolve
+    independently of the training-sized ``tp.*`` entries. Layout mirrors
+    :func:`make_tp_attention`: q and the token's k/v ride an all-to-all
+    from (B_loc, 1, heads, hd) to (B, 1, heads_loc, hd) (``@decode.qkv``),
+    the rank-local page pool (KV heads sharded over ``axis``) is gathered
+    and the new token written, :func:`repro.models.layers.decode_attention`
+    runs on the full batch with local heads, and the inverse exchange
+    (``@decode.out``) restores the batch-sharded layout. Returns the hook
+    ``(q, k_upd, v_upd, *, pages_k, pages_v, block_table, lengths) ->
+    (o, k_full, v_full)`` with ``paged=True`` — the exchanged full-batch
+    k/v go back to the layer scan, whose merge scatters them into the
+    local pool.
+    """
+    n = mesh.shape[axis]
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    if H % n or KV % n:
+        raise ValueError(
+            f"num_heads={H} and num_kv_heads={KV} must be divisible by the "
+            f"{axis!r} axis size {n} for the paged decode exchange")
+    engine = _engine_for(mesh, engine)
+
+    def attn_impl(q, k_upd, v_upd, *, pages_k, pages_v, block_table,
+                  lengths):
+        def gather_heads(t):  # (B_loc, 1, heads, hd) -> (B, 1, heads_loc, hd)
+            return engine.all_to_all_tiles(t, axis, split_axis=2,
+                                           concat_axis=0, schedule=schedule,
+                                           callsite=DECODE_QKV)
+        qh = gather_heads(q)
+        kh = gather_heads(k_upd)
+        vh = gather_heads(v_upd)
+        gk = gather_pages(pages_k, block_table)
+        gv = gather_pages(pages_v, block_table)
+        b_idx = jnp.arange(qh.shape[0])
+        gk = gk.at[b_idx, lengths].set(kh[:, 0], mode="drop")
+        gv = gv.at[b_idx, lengths].set(vh[:, 0], mode="drop")
+        o = decode_attention(qh, gk.astype(qh.dtype), gv.astype(qh.dtype),
+                             lengths=lengths)
+        o = engine.all_to_all_tiles(o, axis, split_axis=0, concat_axis=2,
+                                    schedule=schedule, callsite=DECODE_OUT)
+        return o, kh, vh
+
+    attn_impl.paged = True
     return attn_impl
 
 

@@ -20,7 +20,8 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.kvcache import attn_cache_spec, ssm_cache_spec
+from repro.models.kvcache import (PagedCacheConfig, attn_cache_spec,
+                                  paged_attn_cache_spec, ssm_cache_spec)
 
 Shard = Callable[[jnp.ndarray, str], jnp.ndarray]
 _noshard: Shard = lambda x, name: x
@@ -111,6 +112,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig,
+                     dtype=jnp.bfloat16) -> Dict:
+    """Page pools for every layer, stacked like :func:`init_cache`'s layers.
+
+    Returns ``{"layers": {"pN": {"k_pages","v_pages"}}}`` — no ``"pos"``
+    entry: the serving decode step supplies per-slot lengths as the position
+    vector each call. Attention-only architectures (SSM state is per-slot
+    recurrent, not paged).
+    """
+    period = period_of(cfg)
+    n_super = cfg.num_layers // period
+    kinds = cfg.layer_kinds()
+    if any(k != "attn" for k in kinds):
+        raise ValueError(
+            f"paged cache supports attention-only models; {cfg.name} has "
+            f"layer kinds {sorted(set(kinds))}")
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), tree)
+
+    cache: Dict = {"layers": {}}
+    for p_idx in range(period):
+        spec = paged_attn_cache_spec(cfg, pcfg, dtype)
+        cache["layers"][f"p{p_idx}"] = stack(spec)
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # apply
 # ---------------------------------------------------------------------------
@@ -118,12 +147,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -
 
 def _apply_layer(lp: Dict, cfg: ModelConfig, x, *, kind: str, has_moe: bool,
                  has_cross: bool, cache, pos, cross_kv, shard: Shard,
-                 aux: Optional[dict], attn_impl=None, moe_impl=None):
+                 aux: Optional[dict], attn_impl=None, moe_impl=None,
+                 page_table=None):
     h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
     if kind == "attn":
         a, new_cache = L.apply_attention(lp["attn"], cfg, h, cache=cache,
                                          pos=pos, shard=shard,
-                                         attn_impl=attn_impl)
+                                         attn_impl=attn_impl,
+                                         page_table=page_table)
     else:
         a, new_cache = SSM.apply_ssm(lp["ssm"], cfg, h, cache=cache, pos=pos)
     x = shard(x + a, "residual")
@@ -159,12 +190,16 @@ def apply(
     collect_aux: bool = False,
     attn_impl=None,
     moe_impl=None,
+    page_table: Optional[Dict] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict], Optional[Dict]]:
     """Returns (logits, new_cache, aux).
 
     train:   cache=None                  -> logits (B, S, V)
     prefill: cache at pos 0              -> logits (B, S, V), cache filled
     decode:  cache with pos>0, S == 1    -> logits (B, 1, V), cache advanced
+    paged:   cache from init_paged_cache (+ ``page_table``), S == 1 only —
+             ``cache["pos"]`` is the (B,) per-slot length vector and the
+             merge scatters each layer's token update into its page
 
     ``attn_impl`` / ``moe_impl`` are the explicit whole-model hooks: inside
     a ``shard_map`` body they replace the self-attention core and the MoE
@@ -189,9 +224,17 @@ def apply(
 
     pos = None
     is_decode = False
+    paged = False
     if cache is not None:
         pos = cache["pos"]
         is_decode = tokens.shape[1] == 1
+        first = next(iter(cache["layers"].values()))
+        paged = "k_pages" in first
+        if paged and not is_decode:
+            raise ValueError(
+                "paged cache is decode-only (S == 1); prefill runs against "
+                "a dense cache and is committed into pages via "
+                "repro.models.kvcache.commit_prefill")
         if not is_decode:
             pos = None  # prefill writes from 0
 
@@ -205,7 +248,8 @@ def apply(
                 has_cross=cross_mask[p_idx],
                 cache=lcaches[kp] if lcaches is not None else None,
                 pos=pos, cross_kv=cross_kv, shard=shard, aux=None,
-                attn_impl=attn_impl, moe_impl=moe_impl)
+                attn_impl=attn_impl, moe_impl=moe_impl,
+                page_table=page_table)
             new_caches[kp] = nc if nc is not None else ()
         return x, new_caches
 
@@ -232,12 +276,26 @@ def apply(
         for kp, stacked in cache["layers"].items():
             upd = new_layer_caches[kp]
             m = dict(stacked)
-            for name, val in upd.items():
-                if name in ("k_upd", "v_upd"):
-                    m[name[0]] = jax.lax.dynamic_update_slice(
-                        stacked[name[0]], val, (0, 0, pos, 0, 0))
-                else:
-                    m[name] = val.astype(stacked[name].dtype)
+            if paged:
+                # scatter the token update into each slot's current page;
+                # sentinel block-table entries (inactive slots) drop
+                bt = page_table["block_table"]
+                lengths = page_table["lengths"]
+                ps = stacked["k_pages"].shape[2]
+                col = jnp.clip(lengths // ps, 0, bt.shape[1] - 1)
+                page_idx = jnp.take_along_axis(bt, col[:, None], axis=1)[:, 0]
+                off = lengths % ps
+                for name, val in upd.items():
+                    pooled = name[0] + "_pages"
+                    m[pooled] = stacked[pooled].at[:, page_idx, off].set(
+                        val[:, :, 0], mode="drop")
+            else:
+                for name, val in upd.items():
+                    if name in ("k_upd", "v_upd"):
+                        m[name[0]] = jax.lax.dynamic_update_slice(
+                            stacked[name[0]], val, (0, 0, pos, 0, 0))
+                    else:
+                        m[name] = val.astype(stacked[name].dtype)
             merged[kp] = m
         new_layer_caches = merged
 

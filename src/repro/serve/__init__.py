@@ -1,0 +1,7 @@
+"""Continuous-batching serving layer (paged KV cache + engine-routed
+tensor-parallel decode). See :mod:`repro.serve.engine` for the loop and
+:mod:`repro.serve.scheduler` for admission/slot bookkeeping."""
+from repro.serve.engine import SERVE_MODES, ServeEngine
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["SERVE_MODES", "ServeEngine", "Request", "Scheduler"]

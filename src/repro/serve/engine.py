@@ -1,0 +1,210 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+One :class:`ServeEngine` owns the device state (page pools + params), the
+host :class:`~repro.serve.scheduler.Scheduler`, and the three jitted
+programs of the serving loop:
+
+* **prefill** — per admitted request, the dense prefill step on a batch of
+  one, prompt padded to a power-of-two bucket (bounded recompiles; causal
+  attention makes the pad positions inert), then a jitted
+  :func:`~repro.models.kvcache.commit_prefill` scatters the prefix into
+  the request's reserved pages;
+* **decode** — ONE batched step over all ``max_slots`` slots per loop
+  iteration, inactive slots riding along (their logits are discarded and
+  their cache writes drop on the sentinel block-table rows). Either the
+  GSPMD reference (:func:`repro.train.serve.make_paged_decode_step`) or
+  the engine-routed explicit tensor-parallel program
+  (:func:`repro.train.serve.make_decode_step_explicit`) whose per-token
+  collectives carry the ``decode.*`` callsite tags;
+* **sampling** — host-side (numpy) greedy/temperature, so the scheduler
+  can branch on EOS without another device round-trip.
+
+``step()`` = admit within the prefill-token budget -> prefill those ->
+one decode batch -> sample/advance/recycle. ``run()`` drains the queue and
+returns the full token streams.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.kvcache import (OutOfPagesError, PagedCacheConfig,
+                                  PageAllocator, commit_prefill)
+from repro.models.model import Model
+from repro.serve.scheduler import Request, Scheduler
+from repro.train.serve import (make_decode_step_explicit, make_paged_decode_step,
+                               make_prefill_step)
+
+SERVE_MODES = ("gspmd", "explicit")
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two >= n (floor ``lo``): the prefill shape ladder."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """Continuous-batching server for one model + page-pool geometry."""
+
+    def __init__(self, model: Model, params, pcfg: PagedCacheConfig, *,
+                 mode: str = "gspmd", mesh=None, axis: str = "x",
+                 schedule: Optional[str] = None, nchunks=1,
+                 prefill_token_budget: int = 512,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0, dtype=jnp.float32,
+                 engine=None):
+        if mode not in SERVE_MODES:
+            raise ValueError(f"unknown serve mode {mode!r}; modes: "
+                             f"{SERVE_MODES}")
+        if mode == "explicit":
+            if mesh is None:
+                raise ValueError("explicit serve mode requires a mesh")
+            n = mesh.shape[axis]
+            if pcfg.max_slots % n:
+                raise ValueError(
+                    f"max_slots={pcfg.max_slots} must be divisible by the "
+                    f"{axis!r} axis size {n} for the explicit decode batch")
+        self.model = model
+        self.params = params
+        self.pcfg = pcfg
+        self.mode = mode
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._rng = np.random.default_rng(seed)
+        self._next_rid = 0
+
+        self.alloc = PageAllocator(pcfg)
+        self.scheduler = Scheduler(self.alloc,
+                                   prefill_token_budget=prefill_token_budget)
+        self.pages = T.init_paged_cache(model.cfg, pcfg, dtype)
+        self._dtype = dtype
+        self._last_tok = np.zeros((pcfg.max_slots,), np.int32)
+
+        self._prefill = make_prefill_step(model, None)
+        if mode == "explicit":
+            self._decode = make_decode_step_explicit(
+                model, mesh, axis=axis, engine=engine, schedule=schedule,
+                nchunks=nchunks)
+        else:
+            self._decode = make_paged_decode_step(model, mesh)
+        ps = pcfg.page_size
+        self._commit = jax.jit(
+            lambda pages, dense, row, length: commit_prefill(
+                pages, dense, row, length, page_size=ps),
+            donate_argnums=(0,))
+
+    # -- request API ------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        """Queue a request; returns its id (key into ``run()``'s result)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.scheduler.submit(Request(
+            rid=rid, prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=max_new_tokens))
+        return rid
+
+    # -- sampling (host) --------------------------------------------------
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(p.shape[0], p=p / p.sum()))
+
+    def _advance(self, req: Request, tok: int) -> None:
+        """Record one generated token; finish on EOS / max-new."""
+        req.generated.append(tok)
+        if self.eos_id is not None and tok == self.eos_id:
+            self.scheduler.finish(req, "eos")
+        elif len(req.generated) >= req.max_new_tokens:
+            self.scheduler.finish(req, "max_new")
+        else:
+            self._last_tok[req.slot] = tok
+
+    # -- serving loop -----------------------------------------------------
+
+    def _prefill_one(self, req: Request) -> None:
+        S0 = req.prompt_len
+        Sp = _bucket(S0)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :S0] = req.prompt
+        cache = self.model.init_cache(1, Sp, self._dtype)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      cache)
+        row = jnp.asarray(self.alloc.block_table[req.slot])
+        self.pages = {"layers": self._commit(
+            self.pages["layers"], cache["layers"], row, S0)}
+        self.alloc.commit(req.slot, S0)
+        self._advance(req, self._sample(np.asarray(logits[0, S0 - 1])))
+
+    def step(self) -> Dict:
+        """One loop iteration: admit + prefill within budget, then one
+        batched decode over every active slot. Returns step stats."""
+        admitted = self.scheduler.admit()
+        if not admitted and not self.scheduler.active:
+            if self.scheduler.waiting:
+                head = self.scheduler.waiting[0]
+                raise OutOfPagesError(
+                    f"request {head.rid} ({head.total_budget} tokens) can "
+                    f"never be admitted: pool is idle yet too small")
+            return {"prefills": 0, "prefill_tokens": 0, "decode_tokens": 0,
+                    "active": 0, "decode_s": 0.0}
+        t0 = time.perf_counter()
+        for req in admitted:
+            self._prefill_one(req)
+        prefill_s = time.perf_counter() - t0
+
+        decode_tokens = 0
+        decode_s = 0.0
+        if self.scheduler.active:
+            t0 = time.perf_counter()
+            bt, lengths = self.alloc.device_tables()
+            logits, self.pages = self._decode(
+                self.params, jnp.asarray(self._last_tok[:, None]),
+                self.pages, bt, lengths)
+            rows = np.asarray(logits[:, 0])  # sync: (max_slots, V)
+            decode_s = time.perf_counter() - t0
+            for slot, req in list(self.scheduler.active.items()):
+                self.alloc.append(slot)
+                self._advance(req, self._sample(rows[slot]))
+                decode_tokens += 1
+        return {"prefills": len(admitted),
+                "prefill_tokens": sum(r.prompt_len for r in admitted),
+                "decode_tokens": decode_tokens,
+                "active": len(self.scheduler.active),
+                "prefill_s": prefill_s, "decode_s": decode_s}
+
+    def run(self, requests=None, *, max_new_tokens: int = 16,
+            collect_stats: bool = False):
+        """Drain the queue (optionally submitting ``requests`` first).
+
+        Returns ``{rid: np.ndarray prompt+generated}`` — plus the per-step
+        stats list when ``collect_stats``.
+        """
+        done: List[Request] = []
+        for prompt in (requests or []):
+            self.submit(prompt, max_new_tokens)
+        tracked: Dict[int, Request] = {}
+        for req in self.scheduler.waiting:
+            tracked[req.rid] = req
+        stats = []
+        while self.scheduler.has_work:
+            stats.append(self.step())
+        for req in tracked.values():
+            assert req.done, f"request {req.rid} never finished"
+            done.append(req)
+        out = {req.rid: np.concatenate([req.prompt,
+                                        np.asarray(req.generated, np.int32)])
+               for req in done}
+        return (out, stats) if collect_stats else out

@@ -1,0 +1,109 @@
+"""Continuous-batching scheduler: request queue + slot lifecycle.
+
+Pure host-side bookkeeping, no jax: the scheduler decides *which* requests
+enter the batch (admission against the page pool and a per-step
+prefill-token budget) and *when* a slot is recycled (EOS / max-new); the
+device work lives in :class:`repro.serve.engine.ServeEngine`.
+
+Admission reserves the worst-case page count (prompt + max-new tokens) via
+:class:`repro.models.kvcache.PageAllocator`, so an admitted request can
+always decode to completion — out-of-pages is an admission-time condition,
+never a mid-flight failure. The prefill-token budget bounds how much
+prefill compute any single step may inject between decode batches, which
+caps the per-token latency spike existing streams see when a long prompt
+arrives (the classic continuous-batching interleave knob).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.models.kvcache import PageAllocator
+
+
+@dataclass
+class Request:
+    """One generation request and its accumulated output."""
+    rid: int
+    prompt: np.ndarray            # (S0,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+    finish_reason: Optional[str] = None  # "eos" | "max_new"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_budget(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+class Scheduler:
+    """FIFO admission over a :class:`PageAllocator` with a prefill budget.
+
+    ``admit(budget)`` pops waiting requests while (a) the allocator can
+    reserve their worst-case pages + a slot and (b) their prompt lengths
+    fit the remaining per-step prefill-token budget; each admitted request
+    gets its slot assigned. FIFO head-of-line blocking is deliberate — it
+    keeps admission order deterministic and starvation-free.
+    """
+
+    def __init__(self, alloc: PageAllocator,
+                 prefill_token_budget: int = 512):
+        if prefill_token_budget <= 0:
+            raise ValueError("prefill_token_budget must be positive")
+        self.alloc = alloc
+        self.prefill_token_budget = prefill_token_budget
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request
+
+    # -- queue ------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.total_budget > self.alloc.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={req.total_budget} "
+                f"exceeds max_seq={self.alloc.cfg.max_seq}")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.active)
+
+    # -- admission --------------------------------------------------------
+
+    def admit(self) -> List[Request]:
+        """Admit FIFO-head requests within this step's prefill budget."""
+        admitted: List[Request] = []
+        budget = self.prefill_token_budget
+        while self.waiting:
+            req = self.waiting[0]
+            if req.prompt_len > budget and admitted:
+                break  # budget spent this step; next step continues
+            if not self.alloc.can_allocate(req.total_budget):
+                break  # pool full: wait for a release
+            self.waiting.popleft()
+            req.slot = self.alloc.allocate(req.total_budget)
+            self.active[req.slot] = req
+            admitted.append(req)
+            budget -= req.prompt_len
+            if budget <= 0:
+                break
+        return admitted
+
+    # -- lifecycle --------------------------------------------------------
+
+    def finish(self, req: Request, reason: str) -> None:
+        """Mark done and recycle the slot + pages."""
+        req.done = True
+        req.finish_reason = reason
+        if req.slot is not None:
+            self.alloc.release(req.slot)
+            del self.active[req.slot]
+            req.slot = None

@@ -4,6 +4,15 @@
 ``seq_len`` (the assigned decode_*/long_* cells). ``generate`` is a small
 batched greedy/temperature sampler driving the two jitted steps — the
 "batched requests" server of deliverable (b).
+
+The paged steps back the continuous-batching server (:mod:`repro.serve`):
+``make_paged_decode_step`` is the GSPMD reference, and
+``make_decode_step_explicit`` runs the same token forward inside ONE
+``shard_map`` with every wire hop an explicit engine call — head-parallel
+attention under ``decode.qkv``/``decode.out`` and MoE dispatch/combine
+under ``decode.moe`` (:mod:`repro.comm.callsites`). Per-token payloads are
+tiny, so these callsites resolve in the latency band of the cost model,
+separately from the training-sized ``tp.*``/``moe.*`` entries.
 """
 from __future__ import annotations
 
@@ -15,6 +24,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding as sh
+from repro.comm.callsites import DECODE_MOE
+from repro.comm.engine import CollectiveEngine
+from repro.compat import shard_map
 from repro.models.model import Model
 
 
@@ -42,6 +54,96 @@ def make_decode_step(model: Model, mesh: Optional[Mesh] = None,
         return logits, cache
 
     return jax.jit(decode, donate_argnums=(2,))
+
+
+# ---------------------------------------------------------------------------
+# paged decode: GSPMD reference + explicit engine-routed tensor-parallel
+# ---------------------------------------------------------------------------
+
+
+def make_paged_decode_step(model: Model, mesh: Optional[Mesh] = None
+                           ) -> Callable:
+    """GSPMD paged decode: ``(params, tokens(B,1), pages, block_table,
+    lengths) -> (logits(B,1,V), pages)``.
+
+    ``pages`` is :func:`repro.models.transformer.init_paged_cache` output;
+    ``block_table`` (B, pmax) / ``lengths`` (B,) come from the host
+    :class:`~repro.models.kvcache.PageAllocator`. Row b attends to its
+    pages' positions ``<= lengths[b]`` (the new token is written at
+    ``lengths[b]``); rows with a sentinel block-table row are inactive —
+    their logits are garbage and their cache writes drop.
+    """
+    shard = sh.make_shard_fn(mesh, sh.rules_for(mesh)) if mesh is not None \
+        else (lambda x, _: x)
+
+    def decode(params, tokens, pages, block_table, lengths):
+        cache = {"pos": lengths, "layers": pages["layers"]}
+        page_table = {"block_table": block_table, "lengths": lengths}
+        logits, new_cache, _ = model.apply(
+            params, {"tokens": tokens}, cache=cache, shard=shard,
+            page_table=page_table)
+        return logits, {"layers": new_cache["layers"]}
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+def make_decode_step_explicit(model: Model, mesh: Mesh, *, axis: str = "x",
+                              engine: Optional[CollectiveEngine] = None,
+                              schedule: Optional[str] = None,
+                              nchunks=1) -> Callable:
+    """Engine-routed paged decode: one token's forward inside ONE
+    ``shard_map`` over ``axis``, signature-identical to
+    :func:`make_paged_decode_step`.
+
+    The residual stream stays batch-sharded; per layer the paged decode
+    hook (:func:`repro.models.parallel.make_paged_decode_attention`)
+    exchanges q and the token's k/v head-parallel (``@decode.qkv``), runs
+    :func:`~repro.models.layers.decode_attention` against the rank-local
+    page pool (KV heads sharded over ``axis``), and restores the layout
+    (``@decode.out``); MoE layers dispatch/combine under ``@decode.moe``
+    with experts sharded in the param tree. Requires batch (slot count),
+    heads, kv heads — and experts, when present — divisible by the axis
+    size. Matches the GSPMD step's logits and cache for every registered
+    a2a schedule (tests/dist/test_serve.py).
+    """
+    from repro.models import moe as MOE
+    from repro.models.parallel import make_paged_decode_attention
+    from repro.train.step import whole_model_param_specs
+
+    cfg = model.cfg
+    engine = engine or CollectiveEngine.for_mesh(mesh, schedule="auto")
+    attn_impl = make_paged_decode_attention(cfg, mesh, axis=axis,
+                                            engine=engine, schedule=schedule)
+    moe_impl = None
+    if cfg.has_moe:
+        moe_impl = MOE.make_moe_impl(cfg, mesh, axis=axis, engine=engine,
+                                     schedule=schedule, nchunks=nchunks,
+                                     dispatch_callsite=DECODE_MOE,
+                                     combine_callsite=DECODE_MOE)
+
+    def body(params, tokens, pages_layers, block_table, lengths, pos_loc):
+        cache = {"pos": pos_loc, "layers": pages_layers}
+        page_table = {"block_table": block_table, "lengths": lengths}
+        logits, new_cache, _ = model.apply(
+            params, {"tokens": tokens}, cache=cache, page_table=page_table,
+            attn_impl=attn_impl, moe_impl=moe_impl)
+        return logits, new_cache["layers"]
+
+    def wrapped(params, tokens, pages, block_table, lengths):
+        pspec = whole_model_param_specs(params, axis)
+        # page pools shard the KV-head dim: (n_super, P, ps, KV, hd)
+        pages_spec = jax.tree.map(
+            lambda _: P(None, None, None, axis, None), pages["layers"])
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, P(axis, None), pages_spec, P(), P(), P(axis)),
+            out_specs=(P(axis, None, None), pages_spec),
+            check_vma=False)
+        logits, layers = fn(params, tokens, pages["layers"], block_table,
+                            lengths, lengths)
+        return logits, {"layers": layers}
+
+    return jax.jit(wrapped, donate_argnums=(2,))
 
 
 def generate(model: Model, params, prompts: jnp.ndarray, *,
@@ -77,11 +179,20 @@ def generate(model: Model, params, prompts: jnp.ndarray, *,
         out.append(tok)
         if eos_id is not None:
             done = done | (tok[:, 0] == eos_id)
+            if bool(done.all()):
+                break  # every request hit EOS — stop decoding early
         if i == max_new_tokens - 1:
             break
         key, sub = jax.random.split(key)
         logits, cache = decode(params, tok, cache, decode_extras)
         tok = sample(logits[:, -1], sub)[:, None]
         if eos_id is not None:
+            # finished rows are masked to EOS: their sampled continuations
+            # never leak into the output
             tok = jnp.where(done[:, None], eos_id, tok)
-    return jnp.concatenate(out, axis=1)
+    res = jnp.concatenate(out, axis=1)
+    full = S0 + max_new_tokens
+    if res.shape[1] < full:  # early EOS stop: pad to the fixed output shape
+        pad = jnp.full((B, full - res.shape[1]), eos_id, res.dtype)
+        res = jnp.concatenate([res, pad], axis=1)
+    return res

@@ -238,6 +238,39 @@ def test_measured_moe_callsite_entry_round_trip(tmp_path):
         == CostModel(table=None).choose("all_to_all_tiles", 1024, axes)
 
 
+def test_measured_decode_callsite_entry_round_trip(tmp_path):
+    """The serving burst pattern measures under @decode.qkv on its own
+    decode-sized ladder (not the training ladder), and the winner lands
+    under the @decode.out / @decode.moe aliases; a model with that table
+    resolves all three callsites through it."""
+    from repro.comm.autotune import DECODE_SIZES_QUICK
+    from repro.comm.topology import AxisTopology
+    table, record = autotune_mesh(ops=("all_to_all_tiles@decode.qkv",),
+                                  quick=True, verbose=False)
+    sig = f"ring[{NDEV}]"
+    assert sig in table.entries.get("all_to_all_tiles@decode.qkv", {})
+    rows = table.entries["all_to_all_tiles@decode.qkv"][sig]
+    for _, name in rows:
+        assert name in schedules_for("all_to_all_tiles")
+    # measured at the decode ladder sizes, not the default training sizes
+    assert {int(k.rsplit("/", 1)[1]) for k in record} \
+        == set(DECODE_SIZES_QUICK)
+    for alias in ("all_to_all_tiles@decode.out",
+                  "all_to_all_tiles@decode.moe"):
+        assert table.entries[alias][sig] == rows
+
+    loaded = TuningTable.load(table.save(tmp_path / "tuning.json"))
+    axes = (AxisTopology("x", NDEV, "ring"),)
+    m = CostModel(table=loaded)
+    want = m.choose("all_to_all_tiles", 1024, axes, callsite="decode.qkv")
+    assert want in schedules_for("all_to_all_tiles")
+    for cs in ("decode.out", "decode.moe"):
+        assert m.choose("all_to_all_tiles", 1024, axes, callsite=cs) == want
+    # no callsite -> no tagged entry consulted -> analytic pick
+    assert m.choose("all_to_all_tiles", 1024, axes) \
+        == CostModel(table=None).choose("all_to_all_tiles", 1024, axes)
+
+
 def test_dp_grads_callsite_threads_through_allreduce_tree(ring):
     """allreduce_tree(callsite="dp.grads") consults the tagged table entry
     for its buckets — forcing a distinguishable schedule via the tag changes

@@ -262,21 +262,35 @@ def test_allreduce_int8_ef_close_on_general_inputs(ring):
 
 
 def test_bucketed_psum_tree_legacy_wrapper(ring):
+    """The deprecated shim must warn exactly once at trace time and reduce
+    to the same values as the engine op it forwards to."""
+    import pytest
+
     from repro.comm.overlap import bucketed_psum_tree
     tree = _grad_tree(seed=2)
+    eng = CollectiveEngine.for_mesh(ring, schedule="native")
 
-    def body(t):
-        loc = jax.tree.map(lambda v: v[0], t)
-        out = bucketed_psum_tree(loc, "x", bucket_bytes=256)
-        return jax.tree.map(lambda v: v[None], out)
+    def run(reduce_fn):
+        def body(t):
+            loc = jax.tree.map(lambda v: v[0], t)
+            out = reduce_fn(loc)
+            return jax.tree.map(lambda v: v[None], out)
 
-    fn = jax.jit(shard_map(body, mesh=ring, in_specs=(P("x"),),
-                           out_specs=P("x"), check_vma=False))
-    out = fn(jax.tree.map(jnp.asarray, tree))
+        fn = jax.jit(shard_map(body, mesh=ring, in_specs=(P("x"),),
+                               out_specs=P("x"), check_vma=False))
+        return fn(jax.tree.map(jnp.asarray, tree))
+
+    want = run(lambda loc: eng.allreduce_tree(loc, "x", bucket_bytes=256))
+    with pytest.warns(DeprecationWarning, match="allreduce_tree") as rec:
+        out = run(lambda loc: bucketed_psum_tree(loc, "x", bucket_bytes=256))
+    assert sum(issubclass(w.category, DeprecationWarning)
+               and "bucketed_psum_tree" in str(w.message) for w in rec) == 1
     for key, x in tree.items():
         np.testing.assert_array_equal(
             np.asarray(out[key]),
             np.broadcast_to(x.sum(0, dtype=x.dtype), out[key].shape))
+        np.testing.assert_array_equal(np.asarray(out[key]),
+                                      np.asarray(want[key]))
 
 
 def test_compressed_psum_engine_routing(ring):

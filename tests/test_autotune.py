@@ -202,6 +202,27 @@ def test_regime_pins(op, size, axes, winner):
     assert m.choose(op, size, axes) == winner
 
 
+def test_decode_regime_pins():
+    """Serving decode payloads live in the latency band. On the 4-rank ring
+    the store-and-forward chain beats native's per-tile dispatch overhead
+    at every decode-ladder size and flips to native at training sizes; the
+    8-rank ring pays (n-2) relay hops per tile, so native holds across the
+    whole ladder — the decode callsites resolve per topology, not by size
+    alone."""
+    from repro.comm.autotune import DECODE_SIZES, DECODE_SIZES_QUICK
+    m = analytic()
+    for size in DECODE_SIZES:
+        assert m.choose("all_to_all_tiles", size, RING4) == "chain", size
+    assert m.choose("all_to_all_tiles", 64 * MiB, RING4) == "native"
+    for size in DECODE_SIZES + (64 * MiB,):
+        assert m.choose("all_to_all_tiles", size, RING8) == "native", size
+    # the ladder itself must sit in the latency regime, below the training
+    # ladder's bandwidth-bound sizes, and ascend (winner-band construction)
+    for ladder in (DECODE_SIZES, DECODE_SIZES_QUICK):
+        assert list(ladder) == sorted(ladder)
+        assert ladder[-1] <= 64 * KiB
+
+
 def test_regime_flips_with_message_size():
     """The winner must actually flip across the ladder (paper Figs. 4-7)."""
     m = analytic()
@@ -398,6 +419,44 @@ def test_moe_and_dp_callsite_stale_entries_fall_back():
     red = m.choose("allreduce", MiB, RING8, callsite="dp.grads")
     assert red == analytic().choose("allreduce", MiB, RING8)
     assert red not in LOSSY_SCHEDULES
+
+
+def test_decode_callsite_keys_round_trip():
+    """The serving tags — all_to_all_tiles@decode.qkv and its measured
+    aliases @decode.out / @decode.moe — behave exactly like the moe.* keys:
+    tagged lookup wins over untagged for exactly those callsites, the keys
+    survive json, and the alias map covers every decode tag."""
+    from repro.comm.autotune import PAIRED_ALIASES
+    assert PAIRED_ALIASES["all_to_all_tiles@decode.qkv"] == (
+        "all_to_all_tiles@decode.out", "all_to_all_tiles@decode.moe")
+
+    t = TuningTable()
+    sig = axis_signature(RING8)
+    t.set("all_to_all_tiles", sig, [(None, "native")])
+    keys = ("all_to_all_tiles@decode.qkv",) \
+        + PAIRED_ALIASES["all_to_all_tiles@decode.qkv"]
+    for key in keys:  # what autotune_mesh writes: the same bands per alias
+        t.set(key, sig, [(16 * KiB, "chain"), (None, "native")])
+
+    m = CostModel(table=TuningTable.from_json(t.to_json()))
+    for cs in ("decode.qkv", "decode.out", "decode.moe"):
+        assert m.choose("all_to_all_tiles", KiB, RING8, callsite=cs) \
+            == "chain"
+        assert m.choose("all_to_all_tiles", MiB, RING8, callsite=cs) \
+            == "native"
+    assert m.choose("all_to_all_tiles", KiB, RING8) == "native"  # untagged
+    assert m.choose("all_to_all_tiles", KiB, RING8,
+                    callsite="other") == "native"
+
+
+def test_decode_callsite_stale_entry_falls_back():
+    t = TuningTable()
+    t.set("all_to_all_tiles@decode.qkv", axis_signature(RING8),
+          [(None, "deleted_schedule")])
+    m = CostModel(table=t)
+    choice = m.choose("all_to_all_tiles", KiB, RING8, callsite="decode.qkv")
+    assert choice == analytic().choose("all_to_all_tiles", KiB, RING8)
+    assert choice in schedules_for("all_to_all_tiles")
 
 
 def test_moe_callsite_backend_guard(tmp_path, monkeypatch):

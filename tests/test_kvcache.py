@@ -1,0 +1,277 @@
+"""Paged KV cache: specs, the host-side page allocator, gather/commit
+round-trips, scheduler admission, and the continuous-batching engine
+against the whole-batch ``generate`` reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.kvcache import (OutOfPagesError, PagedCacheConfig,
+                                  PageAllocator, attn_cache_spec,
+                                  commit_prefill, gather_pages,
+                                  paged_attn_cache_spec, ssm_cache_spec)
+from repro.serve import SERVE_MODES, Request, Scheduler, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("llama3.2-3b"), layers=2, d_model=32)
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+# -- dense specs -----------------------------------------------------------
+
+
+def test_dense_cache_specs():
+    cfg = reduced(get_config("llama3.2-3b"))
+    spec = attn_cache_spec(cfg, 3, 16, jnp.bfloat16)
+    assert spec["k"].shape == (3, 16, cfg.num_kv_heads, cfg.head_dim)
+    assert spec["v"].dtype == jnp.bfloat16
+
+    mcfg = reduced(get_config("mamba2-130m"))
+    sspec = ssm_cache_spec(mcfg, 2, jnp.float32)
+    assert sspec["conv_x"].shape[0] == 2
+    assert sspec["conv_x"].shape[1] == mcfg.ssm_conv - 1
+    assert sspec["state"].dtype == jnp.float32  # SSD state stays f32
+
+
+def test_paged_spec_shapes():
+    cfg = reduced(get_config("llama3.2-3b"))
+    pcfg = PagedCacheConfig(page_size=4, num_pages=10, max_slots=2,
+                            max_seq=13)
+    spec = paged_attn_cache_spec(cfg, pcfg, jnp.bfloat16)
+    assert spec["k_pages"].shape == (10, 4, cfg.num_kv_heads, cfg.head_dim)
+    assert spec["v_pages"].dtype == jnp.bfloat16
+    assert pcfg.pages_per_slot == 4  # ceil(13 / 4)
+
+
+def test_paged_config_validation():
+    with pytest.raises(ValueError):
+        PagedCacheConfig(page_size=0, num_pages=8, max_slots=2, max_seq=8)
+    with pytest.raises(ValueError):
+        PagedCacheConfig(page_size=4, num_pages=8, max_slots=-1, max_seq=8)
+
+
+# -- allocator -------------------------------------------------------------
+
+
+def _pcfg(**kw):
+    base = dict(page_size=4, num_pages=8, max_slots=3, max_seq=16)
+    base.update(kw)
+    return PagedCacheConfig(**base)
+
+
+def test_allocate_append_release_roundtrip():
+    alloc = PageAllocator(_pcfg())
+    s = alloc.allocate(10)  # 3 pages
+    assert alloc.free_page_count == 5
+    row = alloc.block_table[s]
+    assert (row[:3] < 8).all() and (row[3:] == 8).all()  # sentinel tail
+    alloc.commit(s, 6)
+    assert alloc.seq_lens[s] == 6
+    for _ in range(4):
+        alloc.append(s)
+    assert alloc.seq_lens[s] == 10
+    # reserved capacity is 3 pages = 12 tokens: 2 more appends fit, not 3
+    alloc.append(s, 2)
+    with pytest.raises(OutOfPagesError):
+        alloc.append(s)
+    alloc.release(s)
+    assert alloc.free_page_count == 8 and alloc.free_slot_count == 3
+    assert (alloc.block_table[s] == 8).all()
+    assert alloc.seq_lens[s] == 0
+
+
+def test_allocator_exhaustion_and_recycle():
+    alloc = PageAllocator(_pcfg())  # 8 pages
+    a = alloc.allocate(16)  # 4 pages
+    b = alloc.allocate(16)  # 4 pages -> pool empty
+    assert not alloc.can_allocate(4)
+    with pytest.raises(OutOfPagesError):
+        alloc.allocate(4)
+    alloc.release(a)
+    assert alloc.can_allocate(16)
+    c = alloc.allocate(16)
+    assert c != b  # a's recycled pages back the new slot
+    assert alloc.free_page_count == 0
+    alloc.release(b), alloc.release(c)
+    # all three slots busy -> no slot even though pages are free
+    s = [alloc.allocate(4) for _ in range(3)]
+    assert not alloc.can_allocate(4)
+    with pytest.raises(OutOfPagesError):
+        alloc.allocate(4)
+    for x in s:
+        alloc.release(x)
+
+
+def test_allocate_validates_max_seq():
+    alloc = PageAllocator(_pcfg())
+    with pytest.raises(ValueError):
+        alloc.allocate(17)  # > max_seq
+    with pytest.raises(ValueError):
+        alloc.allocate(0)
+    s = alloc.allocate(4)
+    with pytest.raises(ValueError):
+        alloc.commit(s, 5)  # past the single reserved page
+
+
+# -- gather / commit -------------------------------------------------------
+
+
+def test_gather_pages_roundtrip():
+    rng = np.random.default_rng(0)
+    pages = jnp.asarray(rng.standard_normal((8, 4, 2, 3)), jnp.float32)
+    bt = jnp.asarray([[5, 1, 8, 8], [0, 8, 8, 8]], jnp.int32)
+    g = gather_pages(pages, bt)
+    assert g.shape == (2, 16, 2, 3)
+    np.testing.assert_array_equal(np.asarray(g[0, :4]), np.asarray(pages[5]))
+    np.testing.assert_array_equal(np.asarray(g[0, 4:8]), np.asarray(pages[1]))
+    np.testing.assert_array_equal(np.asarray(g[1, :4]), np.asarray(pages[0]))
+
+
+def test_commit_prefill_roundtrip(setup):
+    cfg, model, params = setup
+    pcfg = _pcfg(max_seq=12)
+    alloc = PageAllocator(pcfg)
+    slot = alloc.allocate(9)
+    from repro.models import transformer as T
+    pages = T.init_paged_cache(cfg, pcfg, jnp.float32)
+
+    rng = np.random.default_rng(1)
+    S0, Spad = 6, 8  # prefill padded past the true length
+    dense = model.init_cache(1, Spad, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, Spad)), jnp.int32)
+    from repro.train.serve import make_prefill_step
+    _, dense = make_prefill_step(model, None)(params, {"tokens": toks}, dense)
+
+    out = commit_prefill(pages["layers"], dense["layers"],
+                         jnp.asarray(alloc.block_table[slot]), S0,
+                         page_size=pcfg.page_size)
+    for name, stacked in out.items():
+        g = gather_pages(stacked["k_pages"][0],
+                         jnp.asarray(alloc.block_table[slot])[None])
+        ref = np.asarray(dense["layers"][name]["k"][0, 0])
+        np.testing.assert_allclose(np.asarray(g[0, :S0]), ref[:S0])
+        # pad positions (>= S0) dropped on the sentinel, pages stay zero
+        np.testing.assert_array_equal(np.asarray(g[0, S0:]), 0.0)
+
+
+# -- scheduler -------------------------------------------------------------
+
+
+def test_scheduler_budget_and_admission():
+    alloc = PageAllocator(PagedCacheConfig(page_size=4, num_pages=32,
+                                           max_slots=4, max_seq=24))
+    sched = Scheduler(alloc, prefill_token_budget=10)
+    for rid, plen in enumerate((6, 6, 6)):
+        sched.submit(Request(rid=rid,
+                             prompt=np.zeros((plen,), np.int32),
+                             max_new_tokens=4))
+    first = sched.admit()
+    # 6 + 6 > 10: the second admission waits for the next step
+    assert [r.rid for r in first] == [0, 1] or [r.rid for r in first] == [0]
+    assert sum(r.prompt_len for r in first) <= 10 + first[-1].prompt_len
+    second = sched.admit()
+    assert {r.rid for r in first} | {r.rid for r in second} >= {0, 1}
+
+
+def test_scheduler_oversized_head_admitted_alone():
+    """A prompt longer than the budget must not starve at the head."""
+    alloc = PageAllocator(PagedCacheConfig(page_size=4, num_pages=32,
+                                           max_slots=4, max_seq=24))
+    sched = Scheduler(alloc, prefill_token_budget=4)
+    sched.submit(Request(rid=0, prompt=np.zeros((12,), np.int32),
+                         max_new_tokens=4))
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0]
+
+
+def test_scheduler_rejects_over_max_seq():
+    alloc = PageAllocator(_pcfg())
+    sched = Scheduler(alloc)
+    with pytest.raises(ValueError):
+        sched.submit(Request(rid=0, prompt=np.zeros((15,), np.int32),
+                             max_new_tokens=4))  # 19 > max_seq=16
+
+
+def test_scheduler_slot_recycling():
+    alloc = PageAllocator(PagedCacheConfig(page_size=4, num_pages=8,
+                                           max_slots=1, max_seq=16))
+    sched = Scheduler(alloc)
+    for rid in range(2):
+        sched.submit(Request(rid=rid, prompt=np.zeros((4,), np.int32),
+                             max_new_tokens=4))
+    (a,) = sched.admit()
+    assert sched.admit() == []  # single slot busy
+    sched.finish(a, "max_new")
+    assert a.done and a.finish_reason == "max_new" and a.slot is None
+    (b,) = sched.admit()
+    assert b.rid == 1 and b.slot == 0  # recycled
+
+
+# -- engine ----------------------------------------------------------------
+
+
+def test_serve_engine_matches_generate(setup):
+    """Continuous batching (shared pool, slot churn, mixed steps) must be
+    token-exact against the whole-batch dense reference."""
+    from repro.train.serve import generate
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in (5, 9, 3, 12)]
+    max_new = 5
+
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_seq=32)
+    eng = ServeEngine(model, params, pcfg, prefill_token_budget=12)
+    out, stats = eng.run(prompts, max_new_tokens=max_new, collect_stats=True)
+
+    assert max(s["active"] for s in stats) <= 2  # never beyond the slots
+    for rid, prompt in enumerate(prompts):
+        ref = generate(model, params, jnp.asarray(prompt[None]),
+                       max_new_tokens=max_new)
+        np.testing.assert_array_equal(np.asarray(ref[0]), out[rid])
+
+
+def test_serve_engine_eos_recycles_early(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_seq=16)
+    free = ServeEngine(model, params, pcfg).run([prompt], max_new_tokens=6)
+    eos = int(free[0][7])  # the 2nd generated token
+
+    eng = ServeEngine(model, params, pcfg, eos_id=eos)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    out = eng.run()
+    assert out[rid].shape[0] < prompt.shape[0] + 6  # stopped at EOS
+    assert out[rid][-1] == eos
+    assert eng.alloc.free_slot_count == 1  # slot recycled
+
+
+def test_serve_engine_rejects_impossible_request(setup):
+    cfg, model, params = setup
+    pcfg = PagedCacheConfig(page_size=4, num_pages=2, max_slots=1,
+                            max_seq=16)  # pool of 8 tokens
+    eng = ServeEngine(model, params, pcfg)
+    eng.submit(np.zeros((8,), np.int32), max_new_tokens=4)  # needs 12
+    with pytest.raises(OutOfPagesError):
+        eng.run()
+
+
+def test_serve_engine_mode_validation(setup):
+    cfg, model, params = setup
+    pcfg = _pcfg()
+    with pytest.raises(ValueError, match="unknown serve mode"):
+        ServeEngine(model, params, pcfg, mode="speculative")
+    with pytest.raises(ValueError, match="requires a mesh"):
+        ServeEngine(model, params, pcfg, mode="explicit")
+    assert SERVE_MODES == ("gspmd", "explicit")

@@ -58,6 +58,40 @@ def test_generate_eos_padding(setup):
     np.testing.assert_array_equal(row[hit[0]:], eos)  # padded after EOS
 
 
+def test_generate_eos_stops_decoding_early(setup, monkeypatch):
+    """Once every row has hit EOS the loop must stop issuing decode steps
+    (the output keeps its fixed (B, S0+max_new) shape via EOS padding)."""
+    import repro.train.serve as serve_mod
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    calls = []
+    orig = serve_mod.make_decode_step
+
+    def counting(model, mesh=None, **kw):
+        step = orig(model, mesh, **kw)
+
+        def wrapped(*a, **k):
+            calls.append(1)
+            return step(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(serve_mod, "make_decode_step", counting)
+    free = generate(model, params, prompt, max_new_tokens=8)
+    assert len(calls) == 7  # baseline: max_new - 1 decode steps
+    eos = int(free[0, 8])  # greedy repeats on this tiny model: hit = 1st tok
+
+    calls.clear()
+    out = generate(model, params, prompt, max_new_tokens=8, eos_id=eos)
+    assert out.shape == (1, 16)  # shape contract unchanged by the early stop
+    gen = np.asarray(free[0, 8:])
+    k = int(np.flatnonzero(gen == eos)[0])  # decode steps until the EOS hit
+    assert len(calls) == k < 7
+    np.testing.assert_array_equal(np.asarray(out[0, 8:8 + k + 1]),
+                                  gen[:k + 1])
+    np.testing.assert_array_equal(np.asarray(out[0, 8 + k + 1:]), eos)
+
+
 def test_prefill_then_decode_shapes(setup):
     cfg, model, params = setup
     B, S, MAX = 2, 8, 16
