@@ -44,6 +44,10 @@ One module per paper table/figure (DESIGN.md §6):
                    per-token latency vs batch size (records the resolved
                    decode.qkv / decode.out / decode.moe schedules and exits
                    1 if any is unregistered — the --autotune gate)
+  resilience_bench beyond-paper degraded-link resilience: scripted fault ->
+                   drift detection -> narrow retune -> mid-run schedule flip
+                   (bit-exact, deterministic gate), plus straggler-flagged
+                   train degradation and zero-lost-token serve preemption
 """
 from __future__ import annotations
 
@@ -65,6 +69,7 @@ MODULES = [
     "lm_step_bench",
     "overlap_bench",
     "serve_bench",
+    "resilience_bench",
 ]
 
 ALIASES = {
@@ -74,6 +79,7 @@ ALIASES = {
     "overlap": "overlap_bench",
     "lm": "lm_step_bench",
     "serve": "serve_bench",
+    "resilience": "resilience_bench",
 }
 
 # primary collective op per module: --sweep-schedules runs the module once
@@ -93,6 +99,9 @@ SWEEP_OPS = {
     # the decode.qkv/decode.out/decode.moe exchanges are all_to_all_tiles:
     # the sweep reruns the serving loop once per registered schedule
     "serve_bench": "all_to_all_tiles",
+    # the whole point is the *adaptive* auto path: a fixed-schedule sweep
+    # would defeat the retune under test
+    "resilience_bench": None,
 }
 
 # modules with a software-pipeline dimension: --sweep-schedules also runs

@@ -138,11 +138,21 @@ class CheckpointManager:
         self.every = max(every, 1)
         self.keep = keep
 
+    def save(self, step: int, trees: Dict[str, object], *,
+             extra: Optional[dict] = None, force: bool = False
+             ) -> Optional[str]:
+        """Write checkpoint ``step`` through the retention policy.
+
+        ``force=True`` ignores the cadence — the straggler-policy forced
+        checkpoint and the end-of-run save both route here, so every write
+        honors ``keep`` and the stale-tmp garbage collection."""
+        if not force and step % self.every:
+            return None
+        return save(self.directory, step, trees, keep=self.keep, extra=extra)
+
     def maybe_save(self, step: int, trees: Dict[str, object],
                    extra: Optional[dict] = None) -> Optional[str]:
-        if step % self.every == 0:
-            return save(self.directory, step, trees, keep=self.keep, extra=extra)
-        return None
+        return self.save(step, trees, extra=extra)
 
     def restore_latest(self, like, shardings=None):
         return restore(self.directory, like, shardings=shardings)

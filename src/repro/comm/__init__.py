@@ -20,3 +20,14 @@ from repro.comm.collectives import (  # noqa: F401
     ring_exchange_bidir,
     ring_shift,
 )
+from repro.comm.faults import (  # noqa: F401
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    LinkFault,
+)
+from repro.comm.retune import (  # noqa: F401
+    RetuneController,
+    RetuneEvent,
+    Watched,
+)

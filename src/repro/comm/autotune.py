@@ -416,6 +416,22 @@ class TuningTable:
         return cls(hw=data.get("hw", TPU_V5E.name), entries=entries,
                    meta=data.get("meta", {}))
 
+    def merge(self, other: "TuningTable") -> "TuningTable":
+        """A new table with ``other``'s bands overlaid on this one's —
+        ``other`` wins wherever both cover an ``(op, signature)`` pair. The
+        in-run retune path (:mod:`repro.comm.retune`) merges its narrow
+        re-measurement over the persisted full table this way, so cold
+        callsites keep their winners."""
+        out = TuningTable(
+            hw=other.hw or self.hw,
+            entries={op: {sig: list(rows) for sig, rows in sigs.items()}
+                     for op, sigs in self.entries.items()},
+            meta={**self.meta, **other.meta})
+        for op, sigs in other.entries.items():
+            for sig, rows in sigs.items():
+                out.set(op, sig, rows)
+        return out
+
     def save(self, path=None) -> Path:
         path = Path(path or default_table_path())
         path.parent.mkdir(parents=True, exist_ok=True)
@@ -598,6 +614,27 @@ def _winner_bounds(sizes: Sequence[int],
 
 def _measure_op(mesh, op: str, nbytes: int, schedule: str,
                 reps: int) -> float:
+    """Best-of-reps seconds for one (op, schedule, size) on the live mesh,
+    plus the active fault injector's modeled delay for that exact run
+    (:func:`repro.comm.faults.measured_extra_time`) — a degraded link
+    perturbs the measured winners consistently with the analytic view."""
+    t = _measure_op_clean(mesh, op, nbytes, schedule, reps)
+    from repro.comm import faults
+    if faults.active_injector() is not None:
+        from repro.comm.topology import MeshTopology
+        topo = MeshTopology.from_mesh(mesh)
+        if "@" in op:
+            # tagged patterns run along one axis (see autotune_mesh)
+            axes = (topo.axis(topo.names()[0]),)
+        else:
+            axes = tuple(topo.axis(a) for a in topo.names())
+        t += faults.measured_extra_time(op.split("@", 1)[0], schedule,
+                                        nbytes, axes)
+    return t
+
+
+def _measure_op_clean(mesh, op: str, nbytes: int, schedule: str,
+                      reps: int) -> float:
     """Best-of-reps seconds for one (op, schedule, size) on the live mesh."""
     import jax
     import jax.numpy as jnp

@@ -618,6 +618,29 @@ class CollectiveEngine:
         from repro.comm.autotune import default_cost_model
         return default_cost_model()
 
+    def invalidate_resolutions(self, *, table=None, hw=None) -> None:
+        """Drop every memoized ``(op, nbytes, axis, callsite)`` resolution
+        so the next ``schedule="auto"`` lookup re-prices — the adaptive
+        retune hook (:mod:`repro.comm.retune`).
+
+        ``table`` optionally swaps a refreshed
+        :class:`~repro.comm.autotune.TuningTable` into the cost model first
+        (an in-run re-measurement); ``hw`` swaps the
+        :class:`~repro.comm.types.HardwareModel` the analytic ranking
+        prices on (a degraded-link view from
+        :meth:`repro.comm.faults.FaultInjector.hardware_view`). Mutates the
+        engine's cost model — the process default when no explicit
+        ``cost_model`` was given — never the frozen engine, so in-flight
+        references stay valid. Already-traced jitted programs keep the
+        schedule they were traced with; the swap lands on the next trace.
+        """
+        model = self._model()
+        if table is not None:
+            model.table = table
+        if hw is not None:
+            model.hw = hw
+        model._cache.clear()
+
     def _auto_choice(self, op: str, nbytes: Optional[int], axis,
                      callsite: Optional[str] = None) -> str:
         """Cost-model resolution; static default when the model has nothing

@@ -1,0 +1,343 @@
+"""Deterministic fault injection: degraded links for the resilience layer.
+
+The paper's barrier discipline ("the slowest execution time among all
+FPGAs is reported") means one degraded link paces the whole machine, and
+its circuit-switched network can silently fall back to slower routing —
+the failure mode a long-running job must *detect and adapt to*, not just
+measure once. This module makes that failure mode injectable, three ways,
+all driven by the same :class:`FaultInjector`:
+
+* **Cost-model view** — :meth:`FaultInjector.hardware_view` returns a
+  :class:`~repro.comm.types.HardwareModel` with per-hop latency inflated
+  by ``alpha_scale`` and link bandwidth deflated by ``beta_scale`` for
+  the worst fault touching the queried axes. Feeding it to a
+  :class:`~repro.comm.autotune.CostModel` (or through
+  ``CollectiveEngine.invalidate_resolutions(hw=...)``) makes the analytic
+  ranking — and therefore ``schedule="auto"`` — see the slow link.
+* **Measured mode** — while an injector is :func:`activate`-d,
+  :func:`repro.comm.autotune._measure_op` adds
+  :func:`measured_extra_time` to every microbenchmark sample: the
+  degraded-minus-clean analytic cost of that exact ``(op, schedule,
+  nbytes, axes)`` run, so ``autotune_mesh`` winners flip consistently
+  with the perturbed model (``delay_scale`` amplifies the deltas above
+  host-timing noise on the simulated CPU mesh).
+* **Host-side delays** — :meth:`FaultInjector.sleep` stalls the host
+  around a tagged callsite's step, which is how the train loop's
+  :class:`~repro.train.straggler.StragglerMonitor` and the serve engine
+  observe degradation as wall-clock drift.
+
+:class:`FaultSchedule` scripts a timeline over the three ("degrade link
+at step k, heal at step m"), consumable by the train loop
+(``TrainLoopConfig.fault_schedule``), the serve engine
+(``ServeEngine(fault_schedule=...)``), and ``benchmarks/resilience_bench``.
+
+Everything is seedable and deterministic: with ``jitter=0`` (default)
+two runs of the same schedule inject byte-identical perturbations.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.comm.topology import AxisTopology
+from repro.comm.types import TPU_V5E, HardwareModel
+
+FAULT_ACTIONS = ("degrade", "heal", "delay", "clear_delay")
+
+
+@dataclass(frozen=True)
+class LinkFault:
+    """One degraded link: hop ``hop`` of mesh axis ``axis``.
+
+    ``alpha_scale`` multiplies the per-hop latency, ``beta_scale`` divides
+    the link bandwidth. Under the barrier discipline every ring pass on the
+    faulted axis is paced by the slow link: latency is paid per traversal
+    (additive) while a pipelined transfer's steady-state throughput
+    collapses to the slowest link's (bottleneck) — so the degraded view
+    reprices the whole axis at the faulted numbers.
+    """
+    axis: str
+    hop: int = 0
+    alpha_scale: float = 1.0
+    beta_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.alpha_scale < 1.0 or self.beta_scale < 1.0:
+            raise ValueError(
+                f"fault scales must be >= 1 (a fault never speeds a link "
+                f"up): alpha_scale={self.alpha_scale}, "
+                f"beta_scale={self.beta_scale}")
+
+
+def _axis_names(axes) -> Optional[set]:
+    if axes is None:
+        return None
+    return {a.name if isinstance(a, AxisTopology) else str(a) for a in axes}
+
+
+class FaultInjector:
+    """Deterministic, seedable source of injected link degradation.
+
+    ``hw``           the clean :class:`HardwareModel` degraded views derive
+                     from (:data:`TPU_V5E` by default).
+    ``delay_scale``  multiplies :meth:`extra_time` — amplifies microsecond-
+                     scale link deltas into measurable host delays on the
+                     simulated CPU mesh (1.0 = physical).
+    ``jitter``       relative uniform noise on injected delays (0 = exactly
+                     reproducible); drawn from ``seed``.
+    """
+
+    def __init__(self, *, hw: HardwareModel = TPU_V5E, seed: int = 0,
+                 delay_scale: float = 1.0, jitter: float = 0.0):
+        self.hw = hw
+        self.delay_scale = float(delay_scale)
+        self.jitter = float(jitter)
+        self._rng = np.random.default_rng(seed)
+        self._faults: Dict[Tuple[str, int], LinkFault] = {}
+        self._host_delays: Dict[Optional[str], float] = {}
+
+    # -- fault state --------------------------------------------------------
+
+    def degrade_link(self, axis: str, hop: int = 0, *,
+                     alpha_scale: float = 1.0,
+                     beta_scale: float = 1.0) -> LinkFault:
+        """Install (or overwrite) the fault on ``(axis, hop)``."""
+        fault = LinkFault(axis=axis, hop=hop, alpha_scale=alpha_scale,
+                          beta_scale=beta_scale)
+        self._faults[(axis, hop)] = fault
+        return fault
+
+    def heal(self, axis: Optional[str] = None,
+             hop: Optional[int] = None) -> None:
+        """Remove faults: all of them, one axis's, or one (axis, hop)."""
+        if axis is None:
+            self._faults.clear()
+            return
+        self._faults = {k: f for k, f in self._faults.items()
+                        if not (f.axis == axis
+                                and (hop is None or f.hop == hop))}
+
+    @property
+    def active(self) -> bool:
+        return bool(self._faults) or any(self._host_delays.values())
+
+    @property
+    def faults(self) -> Tuple[LinkFault, ...]:
+        return tuple(self._faults.values())
+
+    def scales(self, axes: Optional[Sequence] = None) -> Tuple[float, float]:
+        """``(alpha_scale, beta_scale)`` the barrier discipline imposes on
+        the named axes (axis names or :class:`AxisTopology`): the worst
+        fault touching any of them; ``(1.0, 1.0)`` when clean. ``axes=None``
+        means every axis."""
+        names = _axis_names(axes)
+        hit = [f for f in self._faults.values()
+               if names is None or f.axis in names]
+        return (max((f.alpha_scale for f in hit), default=1.0),
+                max((f.beta_scale for f in hit), default=1.0))
+
+    # -- degraded views -----------------------------------------------------
+
+    def hardware_view(self, hw: Optional[HardwareModel] = None,
+                      axes: Optional[Sequence] = None) -> HardwareModel:
+        """``hw`` with the active faults' scales applied (the object itself,
+        unchanged, when no fault touches ``axes``)."""
+        hw = hw or self.hw
+        a, b = self.scales(axes)
+        if a == 1.0 and b == 1.0:
+            return hw
+        return replace(hw, ici_latency=hw.ici_latency * a,
+                       ici_link_bw=hw.ici_link_bw / b)
+
+    def cost_model_view(self, hw: Optional[HardwareModel] = None):
+        """A fresh analytic :class:`~repro.comm.autotune.CostModel` on the
+        degraded hardware. Deliberately table-free: measured tuning entries
+        predate the fault and would report the clean winners."""
+        from repro.comm.autotune import CostModel
+        return CostModel(hw=self.hardware_view(hw), table=None)
+
+    def extra_time(self, op: str, schedule: str, nbytes: float,
+                   axes: Sequence[AxisTopology],
+                   hw: Optional[HardwareModel] = None) -> float:
+        """Injected wall-clock seconds for one ``(op, schedule)`` run over
+        ``axes``: degraded-minus-clean analytic cost, times ``delay_scale``
+        (plus seeded jitter). Zero when no fault touches the axes or the
+        model has no formula for the schedule."""
+        from repro.comm.autotune import _seg_time, segments
+        hw = hw or self.hw
+        dhw = self.hardware_view(hw, axes)
+        if dhw is hw:
+            return 0.0
+        segs = segments(op, schedule, nbytes, axes, hw)
+        if segs is None:
+            return 0.0
+        extra = sum(_seg_time(s, dhw) - _seg_time(s, hw) for s in segs)
+        extra = max(extra, 0.0) * self.delay_scale
+        if self.jitter > 0.0:
+            extra *= 1.0 + self.jitter * float(self._rng.uniform(-1.0, 1.0))
+        return extra
+
+    # -- host-side delays ---------------------------------------------------
+
+    def add_host_delay(self, callsite: Optional[str],
+                       seconds: float) -> None:
+        """Stall :meth:`sleep` callers by ``seconds``; ``callsite=None``
+        applies to every callsite."""
+        self._host_delays[callsite] = float(seconds)
+
+    def clear_host_delay(self, callsite: Optional[str] = None) -> None:
+        self._host_delays.pop(callsite, None)
+
+    def host_delay(self, callsite: Optional[str] = None) -> float:
+        d = self._host_delays.get(None, 0.0)
+        if callsite is not None:
+            d += self._host_delays.get(callsite, 0.0)
+        return d
+
+    def sleep(self, callsite: Optional[str] = None) -> float:
+        """Sleep the registered host delay for ``callsite``; returns it."""
+        d = self.host_delay(callsite)
+        if d > 0.0:
+            time.sleep(d)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# module-level activation (the measured-mode hook)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def activate(injector: FaultInjector) -> FaultInjector:
+    """Make ``injector`` the process-wide active one: measured-mode
+    microbenchmarks (:func:`repro.comm.autotune._measure_op`) consult it
+    through :func:`measured_extra_time`."""
+    global _ACTIVE
+    _ACTIVE = injector
+    return injector
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active_injector() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+@contextmanager
+def injected(injector: FaultInjector):
+    """``with injected(inj): ...`` — scoped :func:`activate`."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = injector
+    try:
+        yield injector
+    finally:
+        _ACTIVE = prev
+
+
+def measured_extra_time(op: str, schedule: str, nbytes: float,
+                        axes: Sequence[AxisTopology],
+                        hw: Optional[HardwareModel] = None) -> float:
+    """The active injector's :meth:`FaultInjector.extra_time` (0 clean)."""
+    if _ACTIVE is None:
+        return 0.0
+    return _ACTIVE.extra_time(op, schedule, nbytes, axes, hw)
+
+
+# ---------------------------------------------------------------------------
+# scripted fault timelines
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scripted action at loop step ``step``.
+
+    ``action`` is one of :data:`FAULT_ACTIONS`: ``degrade`` installs a
+    :class:`LinkFault` on ``(axis, hop)``; ``heal`` removes it; ``delay`` /
+    ``clear_delay`` manage a host-side stall for ``callsite``.
+    """
+    step: int
+    action: str
+    axis: str = "x"
+    hop: int = 0
+    alpha_scale: float = 1.0
+    beta_scale: float = 1.0
+    seconds: float = 0.0
+    callsite: Optional[str] = None
+
+    def __post_init__(self):
+        if self.action not in FAULT_ACTIONS:
+            raise ValueError(f"unknown fault action {self.action!r}; "
+                             f"actions are {FAULT_ACTIONS}")
+
+
+class FaultSchedule:
+    """A scripted timeline of :class:`FaultEvent`-s over one injector.
+
+    The consuming loop calls :meth:`apply` once per step; events whose
+    ``step`` matches fire (idempotently — installing the same fault twice
+    overwrites, healing an absent one no-ops), and land in ``applied`` for
+    provenance. Steps are loop-local indices, so the same schedule drives a
+    train loop, a serve loop, or a benchmark unchanged.
+    """
+
+    def __init__(self, injector: FaultInjector,
+                 events: Sequence[FaultEvent]):
+        self.injector = injector
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: e.step))
+        self.applied: List[FaultEvent] = []
+
+    @classmethod
+    def degrade_window(cls, injector: FaultInjector, start: int, end: int, *,
+                       axis: str = "x", hop: int = 0,
+                       alpha_scale: float = 1.0, beta_scale: float = 1.0,
+                       host_delay_s: float = 0.0,
+                       callsite: Optional[str] = None) -> "FaultSchedule":
+        """The canonical script: degrade at ``start``, heal at ``end``,
+        optionally stalling ``callsite`` by ``host_delay_s`` meanwhile."""
+        if end <= start:
+            raise ValueError(f"degrade window [{start}, {end}) is empty")
+        events = [FaultEvent(start, "degrade", axis=axis, hop=hop,
+                             alpha_scale=alpha_scale, beta_scale=beta_scale),
+                  FaultEvent(end, "heal", axis=axis, hop=hop)]
+        if host_delay_s > 0.0:
+            events += [FaultEvent(start, "delay", seconds=host_delay_s,
+                                  callsite=callsite),
+                       FaultEvent(end, "clear_delay", callsite=callsite)]
+        return cls(injector, events)
+
+    def apply(self, step: int) -> List[FaultEvent]:
+        """Fire every event scheduled for ``step``; returns them."""
+        fired = []
+        for e in self.events:
+            if e.step != step:
+                continue
+            if e.action == "degrade":
+                self.injector.degrade_link(e.axis, e.hop,
+                                           alpha_scale=e.alpha_scale,
+                                           beta_scale=e.beta_scale)
+            elif e.action == "heal":
+                self.injector.heal(e.axis, e.hop)
+            elif e.action == "delay":
+                self.injector.add_host_delay(e.callsite, e.seconds)
+            else:  # clear_delay
+                self.injector.clear_host_delay(e.callsite)
+            fired.append(e)
+            self.applied.append(e)
+        return fired
+
+    @property
+    def span(self) -> Tuple[int, int]:
+        """(first, last) scheduled step."""
+        return (self.events[0].step, self.events[-1].step) if self.events \
+            else (0, 0)

@@ -1,0 +1,265 @@
+"""Adaptive in-run retuning: the static tuning table made a runtime.
+
+ROADMAP item 5, motivated by the ACCL latency study (PAPERS.md): schedule
+winners flip when link conditions change, so a long-running job must
+detect drift and re-resolve — not trust a table measured at startup.
+
+:class:`RetuneController` watches per-callsite step timings. Its state
+machine::
+
+    BASELINE --(min_baseline samples)--> WATCH
+    WATCH    --(recent median drifts past drift_factor x baseline,
+                or a StragglerMonitor flag: policy "retune")--> RETUNE
+    RETUNE   --(re-price / re-measure, invalidate, re-arm)--> BASELINE
+
+Drift detection is **two-sided**: a degraded link slows steps (ratio
+above ``drift_factor``), a healed one speeds them (ratio below
+``1/drift_factor``) — both mean the current resolutions were priced on
+stale conditions, and both trigger.
+
+A retune is deliberately *narrow*: only the hot callsites (the streams
+that drifted) are re-resolved. Two refresh paths compose:
+
+* ``hw_probe`` — a callable returning the current
+  :class:`~repro.comm.types.HardwareModel` (link telemetry; in tests and
+  benchmarks, :meth:`repro.comm.faults.FaultInjector.hardware_view`). The
+  engine's analytic ranking is re-priced on it. Deterministic — this is
+  what the CI gate asserts on.
+* ``measure=True`` — a narrow :func:`~repro.comm.autotune.autotune_mesh`
+  ladder over only the hot callsites' tagged patterns, at sizes bracketing
+  their live payloads; the refreshed winners are merged over the engine's
+  existing table (and persisted to ``table_path`` when given). While a
+  fault injector is active the measurements include its injected delays,
+  so measured winners flip consistently with the analytic view.
+
+Either way the swap lands through
+:meth:`~repro.comm.engine.CollectiveEngine.invalidate_resolutions` — the
+engine object persists; callers rebuild their (cheap) jitted step from it
+and the next trace resolves fresh.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from statistics import median
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+RETUNE_TRIGGERS = ("drift", "straggler", "forced")
+
+_STEP_STREAM = "step"  # the untagged whole-step timing stream
+
+
+@dataclass(frozen=True)
+class Watched:
+    """One callsite the controller re-resolves on a retune.
+
+    ``op`` / ``nbytes`` / ``axis`` are the engine resolution key the
+    callsite runs at — what ``schedule_for`` is queried with before and
+    after the swap, and what sizes the narrow measured ladder brackets.
+    """
+    callsite: str
+    op: str
+    nbytes: int
+    axis: object  # axis name or tuple of names
+
+
+@dataclass
+class RetuneEvent:
+    """Provenance for one retune: what fired it and what it changed."""
+    step: int
+    trigger: str                       # one of RETUNE_TRIGGERS
+    hot: Tuple[str, ...]               # callsites re-tuned
+    detect_steps: int                  # samples between arming and trigger
+    duration_s: float = 0.0
+    before: Dict[str, str] = field(default_factory=dict)
+    after: Dict[str, str] = field(default_factory=dict)
+
+    @property
+    def changed(self) -> Dict[str, Tuple[str, str]]:
+        return {cs: (b, self.after[cs]) for cs, b in self.before.items()
+                if self.after.get(cs, b) != b}
+
+
+class _Stream:
+    """One callsite's timing samples since the last (re-)arm."""
+
+    def __init__(self, recent: int):
+        self.samples: List[float] = []
+        self.recent: Deque[float] = deque(maxlen=recent)
+        self.baseline: Optional[float] = None
+
+    def add(self, duration: float, min_baseline: int) -> None:
+        self.samples.append(duration)
+        self.recent.append(duration)
+        if self.baseline is None and len(self.samples) >= min_baseline:
+            self.baseline = median(self.samples[:min_baseline])
+
+    def drift(self, factor: float) -> Optional[float]:
+        """The recent/baseline median ratio when it breaches ``factor``
+        either way; None while armed-but-nominal or still collecting."""
+        if self.baseline is None or self.baseline <= 0.0 \
+                or len(self.recent) < self.recent.maxlen:
+            return None
+        ratio = median(self.recent) / self.baseline
+        if ratio > factor or ratio < 1.0 / factor:
+            return ratio
+        return None
+
+
+class RetuneController:
+    """Watches step timings and swaps the engine's schedule resolutions.
+
+    ``engine``       the :class:`~repro.comm.engine.CollectiveEngine` whose
+                     resolutions to refresh (its cost model is mutated in
+                     place — pass an engine built with an explicit
+                     ``cost_model`` to keep the process default untouched).
+    ``watched``      :class:`Watched` entries — the callsites a retune
+                     re-resolves and reports on.
+    ``drift_factor`` two-sided trigger threshold on recent/baseline medians.
+    ``recent``       samples in the recent-median window.
+    ``min_baseline`` samples collected before a stream arms.
+    ``cooldown``     observations ignored after each retune (lets the new
+                     schedule's timings settle before re-arming decisions).
+    ``hw_probe``     optional ``() -> HardwareModel`` link telemetry.
+    ``measure``      run the narrow measured ladder on retune.
+    ``table_path``   where to persist the merged table after a measured
+                     retune (None = in-memory only).
+    """
+
+    def __init__(self, engine, watched: Sequence[Watched], *,
+                 drift_factor: float = 1.75, recent: int = 3,
+                 min_baseline: int = 5, cooldown: int = 8,
+                 hw_probe: Optional[Callable] = None, measure: bool = False,
+                 sizes: Optional[Sequence[int]] = None, reps: int = 2,
+                 quick: bool = True, table_path=None, verbose: bool = False):
+        if drift_factor <= 1.0:
+            raise ValueError("drift_factor must exceed 1.0")
+        if not watched:
+            raise ValueError("RetuneController needs at least one Watched "
+                             "callsite")
+        self.engine = engine
+        self.watched = tuple(watched)
+        self.drift_factor = float(drift_factor)
+        self.recent = int(recent)
+        self.min_baseline = int(min_baseline)
+        self.cooldown = int(cooldown)
+        self.hw_probe = hw_probe
+        self.measure = measure
+        self.sizes = tuple(sizes) if sizes is not None else None
+        self.reps = int(reps)
+        self.quick = quick
+        self.table_path = table_path
+        self.verbose = verbose
+        self.events: List[RetuneEvent] = []
+        self._streams: Dict[str, _Stream] = {}
+        self._cooldown_left = 0
+
+    # -- observation --------------------------------------------------------
+
+    def observe(self, step: int, duration: float,
+                callsite: Optional[str] = None) -> Optional[RetuneEvent]:
+        """Record one timing sample (whole-step when ``callsite`` is None)
+        and retune if it tips a stream past the drift threshold. Returns
+        the event when a retune ran."""
+        key = callsite or _STEP_STREAM
+        stream = self._streams.get(key)
+        if stream is None:
+            stream = self._streams[key] = _Stream(self.recent)
+        stream.add(float(duration), self.min_baseline)
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            return None
+        hot = self._hot()
+        if not hot:
+            return None
+        return self.retune(step, trigger="drift", hot=hot)
+
+    def on_straggler(self, step: int) -> Optional[RetuneEvent]:
+        """A StragglerMonitor flag under policy ``"retune"``: force a
+        retune of every watched callsite (None during cooldown)."""
+        if self._cooldown_left > 0:
+            return None
+        return self.retune(step, trigger="straggler")
+
+    def _hot(self) -> List[str]:
+        """Callsites whose stream drifted; the untagged step stream counts
+        for every watched callsite."""
+        hot: List[str] = []
+        for key, stream in self._streams.items():
+            if stream.drift(self.drift_factor) is None:
+                continue
+            if key == _STEP_STREAM:
+                return [w.callsite for w in self.watched]
+            if key not in hot:
+                hot.append(key)
+        return hot
+
+    # -- the retune itself --------------------------------------------------
+
+    def resolutions(self) -> Dict[str, str]:
+        """Current per-watched-callsite resolved schedule names."""
+        return {w.callsite: self.engine.schedule_for(
+                    w.op, nbytes=w.nbytes, axis=w.axis, callsite=w.callsite)
+                for w in self.watched}
+
+    def retune(self, step: int, *, trigger: str = "forced",
+               hot: Optional[Sequence[str]] = None) -> RetuneEvent:
+        """Re-resolve the hot callsites (all watched by default): re-price
+        on ``hw_probe``'s current link numbers and/or re-measure the narrow
+        ladder, then invalidate the engine's resolution cache. Re-arms
+        every stream and starts the cooldown."""
+        if trigger not in RETUNE_TRIGGERS:
+            raise ValueError(f"unknown retune trigger {trigger!r}; "
+                             f"triggers are {RETUNE_TRIGGERS}")
+        hot = tuple(hot) if hot else tuple(w.callsite for w in self.watched)
+        detect = max((len(s.samples) - self.min_baseline
+                      for s in self._streams.values()), default=0)
+        t0 = time.perf_counter()
+        before = self.resolutions()
+        kwargs: Dict[str, object] = {}
+        if self.hw_probe is not None:
+            kwargs["hw"] = self.hw_probe()
+        if self.measure:
+            kwargs["table"] = self._measure_hot(hot)
+        self.engine.invalidate_resolutions(**kwargs)
+        after = self.resolutions()
+        event = RetuneEvent(step=step, trigger=trigger, hot=hot,
+                            detect_steps=detect,
+                            duration_s=time.perf_counter() - t0,
+                            before=before, after=after)
+        self.events.append(event)
+        self._streams.clear()
+        self._cooldown_left = self.cooldown
+        if self.verbose:
+            print(f"  [retune] step {step} ({trigger}): "
+                  f"{event.changed or 'no schedule change'} "
+                  f"in {event.duration_s * 1e3:.1f}ms")
+        return event
+
+    def _measure_hot(self, hot: Sequence[str]):
+        """The narrow measured ladder: only the hot callsites' tagged
+        patterns (untagged op as the fallback), at sizes bracketing their
+        live payloads, merged over the engine's current table."""
+        from repro.comm.autotune import TuningTable, autotune_mesh
+        from repro.comm.callsites import CALLSITES
+        ops: List[str] = []
+        sizes = set(self.sizes or ())
+        for w in self.watched:
+            if w.callsite not in hot:
+                continue
+            cs = CALLSITES.get(w.callsite)
+            key = cs.tuned if cs is not None and cs.tuned else w.op
+            if key not in ops:
+                ops.append(key)
+            if self.sizes is None:
+                sizes |= {max(int(w.nbytes) // 4, 256), int(w.nbytes),
+                          int(w.nbytes) * 4}
+        fresh, _ = autotune_mesh(ops=tuple(ops), sizes=sorted(sizes),
+                                 reps=self.reps, quick=self.quick,
+                                 verbose=self.verbose)
+        base = getattr(self.engine._model(), "table", None)
+        merged = base.merge(fresh) if isinstance(base, TuningTable) else fresh
+        if self.table_path is not None:
+            merged.save(self.table_path)
+        return merged

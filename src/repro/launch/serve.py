@@ -80,7 +80,9 @@ def _paged(model, params, cfg, args):
     eng = ServeEngine(model, params, pcfg, mode=args.mode, mesh=mesh,
                       schedule=args.schedule,
                       prefill_token_budget=args.prefill_budget,
-                      eos_id=args.eos_id, temperature=args.temperature)
+                      eos_id=args.eos_id, temperature=args.temperature,
+                      preempt=args.preempt,
+                      admission_retries=args.admission_retries)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -88,9 +90,10 @@ def _paged(model, params, cfg, args):
                                                    args.prompt_len + 1)),)
                             ).astype(np.int32)
                for _ in range(args.requests)]
+    for p in prompts:
+        eng.submit(p, args.max_new, deadline_s=args.deadline_s)
     t0 = time.perf_counter()
-    out, stats = eng.run(prompts, max_new_tokens=args.max_new,
-                         collect_stats=True)
+    out, stats = eng.run(collect_stats=True)
     dt = time.perf_counter() - t0
     new_tokens = sum(out[r].shape[0] - p.shape[0]
                      for r, p in enumerate(prompts))
@@ -104,6 +107,11 @@ def _paged(model, params, cfg, args):
         lat = np.sort(decode_steps)
         print(f"decode-step latency p50={lat[len(lat) // 2] * 1e3:.2f}ms "
               f"p99={lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3:.2f}ms")
+    degraded = {k: sum(s.get(k, 0) for s in stats)
+                for k in ("preempted", "timeouts", "rejected")}
+    if any(degraded.values()):
+        print("degradation: " + " ".join(f"{k}={v}"
+                                         for k, v in degraded.items()))
     print("first sequence:", out[0][:prompts[0].shape[0] + 8])
 
 
@@ -121,6 +129,15 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-budget", type=int, default=512)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict the youngest active request (tokens kept, "
+                         "re-prefilled) when the head cannot get pages")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline; expired requests "
+                         "finish with reason 'timeout'")
+    ap.add_argument("--admission-retries", type=int, default=256,
+                    help="failed admission attempts before the queue head "
+                         "is rejected")
     ap.add_argument("--legacy", action="store_true",
                     help="whole-batch generate loop instead of the "
                          "continuous-batching engine")

@@ -43,12 +43,19 @@ from repro.train.serve import (make_decode_step_explicit, make_paged_decode_step
 SERVE_MODES = ("gspmd", "explicit")
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    """Next power-of-two >= n (floor ``lo``): the prefill shape ladder."""
+def _bucket(n: int, lo: int = 8, hi: Optional[int] = None) -> int:
+    """Next power-of-two >= n (floor ``lo``): the prefill shape ladder.
+
+    ``hi`` clamps the ladder to the max context — the top bucket is exactly
+    ``hi`` (not the next power of two past it), so prefill never pads
+    beyond what the cache can hold. ``n > hi`` is the caller's bug."""
+    if hi is not None and n > hi:
+        raise ValueError(f"sequence of {n} tokens exceeds the {hi}-token "
+                         "max context")
     b = lo
     while b < n:
         b *= 2
-    return b
+    return min(b, hi) if hi is not None else b
 
 
 class ServeEngine:
@@ -60,7 +67,8 @@ class ServeEngine:
                  prefill_token_budget: int = 512,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  seed: int = 0, dtype=jnp.float32,
-                 engine=None):
+                 engine=None, preempt: bool = False,
+                 admission_retries: int = 256, fault_schedule=None):
         if mode not in SERVE_MODES:
             raise ValueError(f"unknown serve mode {mode!r}; modes: "
                              f"{SERVE_MODES}")
@@ -80,10 +88,16 @@ class ServeEngine:
         self.temperature = temperature
         self._rng = np.random.default_rng(seed)
         self._next_rid = 0
+        if admission_retries <= 0:
+            raise ValueError("admission_retries must be positive")
+        self.admission_retries = admission_retries
+        self._fault_schedule = fault_schedule
+        self._steps = 0
 
         self.alloc = PageAllocator(pcfg)
         self.scheduler = Scheduler(self.alloc,
-                                   prefill_token_budget=prefill_token_budget)
+                                   prefill_token_budget=prefill_token_budget,
+                                   preempt=preempt)
         self.pages = T.init_paged_cache(model.cfg, pcfg, dtype)
         self._dtype = dtype
         self._last_tok = np.zeros((pcfg.max_slots,), np.int32)
@@ -103,13 +117,28 @@ class ServeEngine:
 
     # -- request API ------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
-        """Queue a request; returns its id (key into ``run()``'s result)."""
+    def submit(self, prompt, max_new_tokens: int = 16, *,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request; returns its id (key into ``run()``'s result).
+
+        Rejects impossible requests *here*, not mid-run: a worst-case page
+        reservation larger than the whole pool raises
+        :class:`OutOfPagesError` (it could never be admitted, even with
+        every slot idle), and prompt+max_new past ``max_seq`` raises
+        ``ValueError``. ``deadline_s`` is a wall-clock budget from now;
+        an expired request finishes with reason ``"timeout"``."""
         rid = self._next_rid
         self._next_rid += 1
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        total = int(prompt.shape[0]) + max_new_tokens
+        need = -(-total // self.pcfg.page_size)
+        if need > self.pcfg.num_pages:
+            raise OutOfPagesError(
+                f"request {rid} ({total} tokens) needs {need} pages but the "
+                f"pool holds {self.pcfg.num_pages}: it can never be admitted")
         self.scheduler.submit(Request(
-            rid=rid, prompt=np.asarray(prompt, np.int32).reshape(-1),
-            max_new_tokens=max_new_tokens))
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            deadline_s=deadline_s))
         return rid
 
     # -- sampling (host) --------------------------------------------------
@@ -135,10 +164,13 @@ class ServeEngine:
     # -- serving loop -----------------------------------------------------
 
     def _prefill_one(self, req: Request) -> None:
-        S0 = req.prompt_len
-        Sp = _bucket(S0)
+        # prefill_len/tokens_so_far, not the bare prompt: a preempted
+        # request re-enters here with its generated tokens intact, and the
+        # re-prefill resumes the stream exactly where eviction cut it
+        S0 = req.prefill_len
+        Sp = _bucket(S0, hi=self.pcfg.max_seq)
         toks = np.zeros((1, Sp), np.int32)
-        toks[0, :S0] = req.prompt
+        toks[0, :S0] = req.tokens_so_far
         cache = self.model.init_cache(1, Sp, self._dtype)
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
                                       cache)
@@ -149,9 +181,28 @@ class ServeEngine:
         self._advance(req, self._sample(np.asarray(logits[0, S0 - 1])))
 
     def step(self) -> Dict:
-        """One loop iteration: admit + prefill within budget, then one
-        batched decode over every active slot. Returns step stats."""
+        """One loop iteration: expire deadlines, admit + prefill within
+        budget (preempting if armed), then one batched decode over every
+        active slot. Returns step stats."""
+        if self._fault_schedule is not None:
+            self._fault_schedule.apply(self._steps)
+        self._steps += 1
+        expired = self.scheduler.expire(time.monotonic())
+        pre_preempted = self.scheduler.preempted_total
         admitted = self.scheduler.admit()
+        preempted = self.scheduler.preempted_total - pre_preempted
+
+        # backpressure: a head past its retry budget is rejected so the
+        # queue keeps moving (never-fitting requests were already refused
+        # at submit(); this is for pools pinned by long-lived actives)
+        rejected = 0
+        while (self.scheduler.waiting
+               and self.scheduler.waiting[0].wait_steps
+               > self.admission_retries):
+            head = self.scheduler.waiting.popleft()
+            self.scheduler.finish(head, "rejected")
+            rejected += 1
+
         if not admitted and not self.scheduler.active:
             if self.scheduler.waiting:
                 head = self.scheduler.waiting[0]
@@ -159,7 +210,8 @@ class ServeEngine:
                     f"request {head.rid} ({head.total_budget} tokens) can "
                     f"never be admitted: pool is idle yet too small")
             return {"prefills": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                    "active": 0, "decode_s": 0.0}
+                    "active": 0, "decode_s": 0.0, "preempted": preempted,
+                    "timeouts": len(expired), "rejected": rejected}
         t0 = time.perf_counter()
         for req in admitted:
             self._prefill_one(req)
@@ -169,6 +221,10 @@ class ServeEngine:
         decode_s = 0.0
         if self.scheduler.active:
             t0 = time.perf_counter()
+            if self._fault_schedule is not None:
+                # injected host delay lands inside the measured decode
+                # window — tok/s during the fault degrades accordingly
+                self._fault_schedule.injector.sleep("serve.step")
             bt, lengths = self.alloc.device_tables()
             logits, self.pages = self._decode(
                 self.params, jnp.asarray(self._last_tok[:, None]),
@@ -180,10 +236,12 @@ class ServeEngine:
                 self._advance(req, self._sample(rows[slot]))
                 decode_tokens += 1
         return {"prefills": len(admitted),
-                "prefill_tokens": sum(r.prompt_len for r in admitted),
+                "prefill_tokens": sum(r.prefill_len for r in admitted),
                 "decode_tokens": decode_tokens,
                 "active": len(self.scheduler.active),
-                "prefill_s": prefill_s, "decode_s": decode_s}
+                "prefill_s": prefill_s, "decode_s": decode_s,
+                "preempted": preempted, "timeouts": len(expired),
+                "rejected": rejected}
 
     def run(self, requests=None, *, max_new_tokens: int = 16,
             collect_stats: bool = False):
@@ -202,7 +260,11 @@ class ServeEngine:
         while self.scheduler.has_work:
             stats.append(self.step())
         for req in tracked.values():
-            assert req.done, f"request {req.rid} never finished"
+            if not req.done:
+                raise RuntimeError(
+                    f"request {req.rid} never finished: scheduler drained "
+                    f"with slot={req.slot}, {len(req.generated)}/"
+                    f"{req.max_new_tokens} tokens generated")
             done.append(req)
         out = {req.rid: np.concatenate([req.prompt,
                                         np.asarray(req.generated, np.int32)])

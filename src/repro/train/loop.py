@@ -47,6 +47,19 @@ class TrainLoopConfig:
     # explicit modes run the whole forward+backward inside one shard_map
     # with engine-routed collectives (make_whole_model_train_step_explicit)
     step_mode: str = "gspmd"
+    # straggler reaction (repro.train.straggler.POLICIES): 'warn' |
+    # 'checkpoint' (force an early save) | 'retune' (hand the flag to the
+    # RetuneController below)
+    straggler_policy: str = "checkpoint"
+    # scripted degraded-link timeline (repro.comm.faults.FaultSchedule):
+    # applied at each step's start, its host delays land inside the timed
+    # region so the StragglerMonitor sees them
+    fault_schedule: Optional[object] = None
+    # adaptive retuning (repro.comm.retune.RetuneController): observes every
+    # step duration; on a retune event under an explicit step_mode the
+    # jitted step is rebuilt so the next trace picks up the swapped
+    # schedules (the engine itself is never rebuilt)
+    retune: Optional[object] = None
 
 
 class InjectedFailure(RuntimeError):
@@ -101,10 +114,14 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
             np.array(jax.devices()[:1]), ("x",)), total_steps=loop_cfg.steps)
 
     monitor = StragglerMonitor(deadline_factor=run_cfg.step_deadline_factor,
-                               policy="checkpoint")
+                               policy=loop_cfg.straggler_policy)
+    retuner = loop_cfg.retune
+    schedule = loop_cfg.fault_schedule
     history: Dict[str, List[float]] = {"loss": [], "step_time": [], "step": []}
 
     for step in range(start_step, loop_cfg.steps):
+        if schedule is not None:
+            schedule.apply(step)
         batch_np = dataset.batch(step)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         if mesh is not None and not explicit:
@@ -114,9 +131,26 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
                      for k, v in batch.items()}
 
         with StepTimer() as t:
+            if schedule is not None:
+                # inside the timed region: the monitor and the retune
+                # controller both see the injected degradation
+                schedule.injector.sleep("train.step")
             state, metrics = step_fn(state, batch)
             loss = float(metrics["loss"])
         straggled = monitor.record(step, t.duration)
+
+        if retuner is not None:
+            if straggled and monitor.policy == "retune":
+                event = retuner.on_straggler(step)
+            else:
+                event = retuner.observe(step, t.duration)
+            if event is not None and explicit:
+                # resolutions swapped — rebuild the (cheap) jitted step so
+                # the next trace picks up the new schedules
+                step_fn = make_whole_model_train_step_explicit(
+                    model, run_cfg, mesh,
+                    attn_mode=loop_cfg.step_mode[len("explicit_"):],
+                    total_steps=loop_cfg.steps)
 
         history["loss"].append(loss)
         history["step_time"].append(t.duration)
@@ -129,16 +163,17 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
             raise InjectedFailure(f"injected failure before step {next_step}")
 
         if manager is not None:
-            forced = straggled and monitor.policy == "checkpoint"
-            if forced or next_step % manager.every == 0:
+            if straggled and monitor.policy == "checkpoint":
+                manager.save(next_step, {"state": state},
+                             extra={"loss": loss, "forced": True}, force=True)
+            else:
                 manager.maybe_save(next_step, {"state": state},
-                                   extra={"loss": loss}) if not forced else \
-                    ckpt.save(manager.directory, next_step, {"state": state},
-                              keep=manager.keep, extra={"loss": loss,
-                                                        "forced": True})
+                                   extra={"loss": loss})
 
     if manager is not None:
-        ckpt.save(manager.directory, loop_cfg.steps, {"state": state},
-                  keep=manager.keep, extra={"final": True})
+        manager.save(loop_cfg.steps, {"state": state}, extra={"final": True},
+                     force=True)
     history["straggler"] = monitor.summary()  # type: ignore[assignment]
+    if retuner is not None:
+        history["retune_events"] = retuner.events  # type: ignore[assignment]
     return history

@@ -6,30 +6,43 @@ shows up as a slow *global* step (XLA collectives are barriers). The monitor
 tracks a running median of step wall-times and flags steps slower than
 ``deadline_factor`` x median; the loop reacts per policy ('warn' — log and
 continue; 'checkpoint' — force an early checkpoint so a restart loses
-nothing; real deployments add 'evict' via the cluster scheduler).
+nothing; 'retune' — hand the flag to a
+:class:`repro.comm.retune.RetuneController`, which re-resolves the hot
+collective schedules on the degraded link numbers; real deployments add
+'evict' via the cluster scheduler).
 """
 from __future__ import annotations
 
-import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, Optional
+
+POLICIES = ("warn", "checkpoint", "retune")
+
+_MIN_BASELINE = 8  # samples before the median is trusted
 
 
 @dataclass
 class StragglerMonitor:
     deadline_factor: float = 3.0
-    policy: str = "warn"  # 'warn' | 'checkpoint'
+    policy: str = "warn"  # one of POLICIES
     window: int = 128
-    _times: List[float] = field(default_factory=list)
-    flagged: List[int] = field(default_factory=list)
+    max_flagged: int = 256  # bounds the flag log over unbounded runs
+    _times: Deque[float] = field(default_factory=deque, repr=False)
+    flagged: Deque[int] = field(default_factory=deque)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown straggler policy {self.policy!r}; "
+                             f"policies are {POLICIES}")
+        self._times = deque(self._times, maxlen=self.window)
+        self.flagged = deque(self.flagged, maxlen=self.max_flagged)
 
     def record(self, step: int, duration: float) -> bool:
         """Returns True if this step is a straggler."""
         self._times.append(duration)
-        if len(self._times) > self.window:
-            self._times.pop(0)
-        if len(self._times) < 8:  # need a baseline first
+        if len(self._times) < _MIN_BASELINE:  # need a baseline first
             return False
         med = self.median()
         if duration > self.deadline_factor * med:
@@ -43,7 +56,7 @@ class StragglerMonitor:
         return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
 
     def deadline(self) -> Optional[float]:
-        if len(self._times) < 8:
+        if len(self._times) < _MIN_BASELINE:
             return None
         return self.deadline_factor * self.median()
 

@@ -1,0 +1,267 @@
+"""Unit tests for the resilience layer: deterministic fault injection
+(repro.comm.faults), the narrow retune controller (repro.comm.retune),
+mid-run engine invalidation, and the tuning-table merge they ride on."""
+from __future__ import annotations
+
+import pytest
+
+from repro.comm.autotune import CostModel, TuningTable
+from repro.comm.engine import CollectiveEngine
+from repro.comm.faults import (FAULT_ACTIONS, FaultEvent, FaultInjector,
+                               FaultSchedule, LinkFault, active_injector,
+                               injected, measured_extra_time)
+from repro.comm.retune import RETUNE_TRIGGERS, RetuneController, Watched
+from repro.comm.topology import AxisTopology, MeshTopology
+from repro.comm.types import TPU_V5E
+
+RING8 = (AxisTopology("x", 8, "ring"),)
+NBYTES = 16384
+
+
+def _engine():
+    """Host-side engine over an 8-ring with an isolated analytic model —
+    no live mesh needed for schedule resolution."""
+    return CollectiveEngine(schedule="auto",
+                            topology=MeshTopology(axes=RING8),
+                            cost_model=CostModel(hw=TPU_V5E, table=None))
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+
+def test_link_fault_rejects_speedups():
+    with pytest.raises(ValueError):
+        LinkFault("x", 0, alpha_scale=0.5)
+    with pytest.raises(ValueError):
+        LinkFault("x", 0, beta_scale=0.0)
+    LinkFault("x", 0, alpha_scale=1.0, beta_scale=64.0)  # >= 1 is fine
+
+
+def test_injector_degrade_heal_roundtrip():
+    inj = FaultInjector(hw=TPU_V5E)
+    assert not inj.active
+    assert inj.hardware_view() is TPU_V5E  # clean view is the identity
+
+    inj.degrade_link("x", 0, alpha_scale=2.0, beta_scale=8.0)
+    assert inj.active
+    a, b = inj.scales(("x",))
+    assert (a, b) == (2.0, 8.0)
+    assert inj.scales(("y",)) == (1.0, 1.0)  # other axes untouched
+    hw = inj.hardware_view()
+    assert hw.ici_latency == pytest.approx(TPU_V5E.ici_latency * 2.0)
+    assert hw.ici_link_bw == pytest.approx(TPU_V5E.ici_link_bw / 8.0)
+
+    inj.heal("x", 0)
+    assert not inj.active
+    assert inj.hardware_view() is TPU_V5E
+
+
+def test_extra_time_charges_only_link_bound_schedules():
+    inj = FaultInjector(hw=TPU_V5E)
+    inj.degrade_link("x", 0, beta_scale=64.0)
+    chain = inj.extra_time("bcast", "chain", NBYTES, RING8)
+    staged = inj.extra_time("bcast", "staged", NBYTES, RING8)
+    assert chain > 0.0
+    assert staged == pytest.approx(0.0)  # staged routing avoids the link
+    inj.heal()
+    assert inj.extra_time("bcast", "chain", NBYTES, RING8) == 0.0
+
+
+def test_host_delays_compose_and_clear():
+    inj = FaultInjector(hw=TPU_V5E)
+    inj.add_host_delay(None, 0.005)       # everywhere
+    inj.add_host_delay("train.step", 0.010)
+    assert inj.host_delay("train.step") == pytest.approx(0.015)
+    assert inj.host_delay("serve.step") == pytest.approx(0.005)
+    inj.clear_host_delay("train.step")
+    assert inj.host_delay("train.step") == pytest.approx(0.005)
+    inj.clear_host_delay(None)
+    assert inj.host_delay("train.step") == 0.0
+
+
+def test_injected_context_sets_and_restores():
+    inj = FaultInjector(hw=TPU_V5E)
+    inj.degrade_link("x", 0, beta_scale=4.0)
+    assert active_injector() is None
+    assert measured_extra_time("bcast", "chain", NBYTES, RING8) == 0.0
+    with injected(inj):
+        assert active_injector() is inj
+        assert measured_extra_time("bcast", "chain", NBYTES, RING8) > 0.0
+    assert active_injector() is None
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validates_action():
+    for action in FAULT_ACTIONS:
+        FaultEvent(0, action)
+    with pytest.raises(ValueError):
+        FaultEvent(0, "explode")
+
+
+def test_degrade_window_rejects_empty():
+    inj = FaultInjector(hw=TPU_V5E)
+    with pytest.raises(ValueError, match="empty"):
+        FaultSchedule.degrade_window(inj, 5, 5, beta_scale=2.0)
+
+
+def test_schedule_applies_at_exact_steps():
+    inj = FaultInjector(hw=TPU_V5E)
+    sched = FaultSchedule.degrade_window(inj, 3, 6, axis="x",
+                                         beta_scale=16.0,
+                                         host_delay_s=0.01, callsite="c")
+    assert sched.span == (3, 6)
+    for step in range(8):
+        sched.apply(step)
+        if 3 <= step < 6:
+            assert inj.active
+            assert inj.host_delay("c") == pytest.approx(0.01)
+        else:
+            assert not inj.active
+            assert inj.host_delay("c") == 0.0
+    # re-applying a fired step is effect-idempotent: the same fault is
+    # overwritten, not stacked
+    sched.apply(3)
+    sched.apply(3)
+    assert inj.active and inj.scales(("x",)) == (1.0, 16.0)
+    sched.apply(6)
+    assert not inj.active and inj.host_delay("c") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# TuningTable.merge + invalidate_resolutions
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_table_merge_overrides_per_signature():
+    base = TuningTable(hw="a", meta={"k": 1, "keep": True})
+    base.set("bcast", "ring[8]", [(None, "chain")])
+    base.set("allreduce", "ring[8]", [(None, "rs_ag")])
+    other = TuningTable(hw="b", meta={"k": 2})
+    other.set("bcast", "ring[8]", [(4096, "native"), (None, "staged")])
+
+    merged = base.merge(other)
+    assert merged.entries["bcast"]["ring[8]"] == [(4096, "native"),
+                                                  (None, "staged")]
+    assert merged.entries["allreduce"]["ring[8]"] == [(None, "rs_ag")]
+    assert merged.hw == "b" and merged.meta == {"k": 2, "keep": True}
+    # the inputs are untouched
+    assert base.entries["bcast"]["ring[8]"] == [(None, "chain")]
+
+
+def test_invalidate_resolutions_swaps_without_rebuild():
+    inj = FaultInjector(hw=TPU_V5E)
+    engine = _engine()
+    before = engine.schedule_for("bcast", nbytes=NBYTES, axis="x",
+                                 callsite="hpl.panel")
+    inj.degrade_link("x", 0, beta_scale=64.0)
+    engine.invalidate_resolutions(hw=inj.hardware_view())
+    during = engine.schedule_for("bcast", nbytes=NBYTES, axis="x",
+                                 callsite="hpl.panel")
+    inj.heal()
+    engine.invalidate_resolutions(hw=inj.hardware_view())
+    after = engine.schedule_for("bcast", nbytes=NBYTES, axis="x",
+                                callsite="hpl.panel")
+    assert before == "chain" and during == "staged" and after == before
+
+
+def test_invalidate_resolutions_swaps_table():
+    engine = _engine()
+    t = TuningTable(hw="test")
+    t.set("bcast", "ring[8]", [(None, "native")])
+    engine.invalidate_resolutions(table=t)
+    assert engine.schedule_for("bcast", nbytes=NBYTES, axis="x") == "native"
+
+
+# ---------------------------------------------------------------------------
+# RetuneController
+# ---------------------------------------------------------------------------
+
+
+def _controller(engine, inj, **kw):
+    kw.setdefault("drift_factor", 1.75)
+    kw.setdefault("recent", 2)
+    kw.setdefault("min_baseline", 3)
+    kw.setdefault("cooldown", 2)
+    return RetuneController(engine, [Watched("hpl.panel", "bcast",
+                                             NBYTES, "x")],
+                            hw_probe=inj.hardware_view, **kw)
+
+
+def test_controller_validation():
+    engine = _engine()
+    inj = FaultInjector(hw=TPU_V5E)
+    with pytest.raises(ValueError, match="drift_factor"):
+        RetuneController(engine, [Watched("c", "bcast", 1, "x")],
+                         drift_factor=1.0)
+    with pytest.raises(ValueError, match="at least one"):
+        RetuneController(engine, [])
+    ctrl = _controller(engine, inj)
+    with pytest.raises(ValueError, match="trigger"):
+        ctrl.retune(0, trigger="panic")
+    assert RETUNE_TRIGGERS == ("drift", "straggler", "forced")
+
+
+def test_controller_detects_degrade_and_heal():
+    engine = _engine()
+    inj = FaultInjector(hw=TPU_V5E)
+    ctrl = _controller(engine, inj)
+
+    events = []
+    for step in range(6):  # nominal: baseline arms, nothing fires
+        assert ctrl.observe(step, 1.0) is None
+
+    inj.degrade_link("x", 0, beta_scale=64.0)
+    for step in range(6, 12):
+        ev = ctrl.observe(step, 16.0)
+        if ev:
+            events.append(ev)
+    assert len(events) == 1
+    assert events[0].trigger == "drift"
+    assert events[0].changed == {"hpl.panel": ("chain", "staged")}
+
+    # cooldown re-arms a fresh baseline at the degraded speed, then the
+    # heal shows up as a *downward* drift — the detector is two-sided
+    inj.heal()
+    for step in range(12, 24):
+        ev = ctrl.observe(step, 1.0)
+        if ev:
+            events.append(ev)
+    assert len(events) == 2
+    assert events[1].changed == {"hpl.panel": ("staged", "chain")}
+
+
+def test_controller_straggler_trigger_and_cooldown():
+    engine = _engine()
+    inj = FaultInjector(hw=TPU_V5E)
+    ctrl = _controller(engine, inj, cooldown=5)
+    inj.degrade_link("x", 0, beta_scale=64.0)
+    ev = ctrl.on_straggler(7)
+    assert ev is not None and ev.trigger == "straggler"
+    assert ev.changed == {"hpl.panel": ("chain", "staged")}
+    assert ctrl.on_straggler(8) is None       # cooling down
+    assert ctrl.observe(9, 100.0) is None     # observations too
+    assert len(ctrl.events) == 1
+
+
+def test_controller_callsite_stream_narrows_hot_set():
+    engine = _engine()
+    inj = FaultInjector(hw=TPU_V5E)
+    watched = [Watched("hpl.panel", "bcast", NBYTES, "x"),
+               Watched("dp.grads", "allreduce", NBYTES, "x")]
+    ctrl = RetuneController(engine, watched, drift_factor=1.75, recent=2,
+                            min_baseline=3, cooldown=2,
+                            hw_probe=inj.hardware_view)
+    inj.degrade_link("x", 0, beta_scale=64.0)
+    ev = None
+    for step in range(10):
+        got = ctrl.observe(step, 16.0 if step >= 5 else 1.0,
+                           callsite="hpl.panel")
+        ev = ev or got
+    assert ev is not None
+    assert ev.hot == ("hpl.panel",)  # only the drifted stream retunes

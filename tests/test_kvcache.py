@@ -262,8 +262,23 @@ def test_serve_engine_rejects_impossible_request(setup):
     pcfg = PagedCacheConfig(page_size=4, num_pages=2, max_slots=1,
                             max_seq=16)  # pool of 8 tokens
     eng = ServeEngine(model, params, pcfg)
-    eng.submit(np.zeros((8,), np.int32), max_new_tokens=4)  # needs 12
-    with pytest.raises(OutOfPagesError):
+    # a request whose worst-case reservation exceeds the whole pool is
+    # refused at submit() — it could never be admitted, even idle
+    with pytest.raises(OutOfPagesError, match="never be admitted"):
+        eng.submit(np.zeros((8,), np.int32), max_new_tokens=4)  # needs 12
+    assert not eng.scheduler.has_work
+
+
+def test_serve_engine_idle_pool_raise_via_scheduler_bypass(setup):
+    # the step()-time guard still fires for requests that skip the
+    # engine's submit() validation (direct scheduler use)
+    cfg, model, params = setup
+    pcfg = PagedCacheConfig(page_size=4, num_pages=2, max_slots=1,
+                            max_seq=16)
+    eng = ServeEngine(model, params, pcfg)
+    eng.scheduler.submit(Request(rid=0, prompt=np.zeros((8,), np.int32),
+                                 max_new_tokens=4))
+    with pytest.raises(OutOfPagesError, match="pool is idle yet too small"):
         eng.run()
 
 
@@ -275,3 +290,119 @@ def test_serve_engine_mode_validation(setup):
     with pytest.raises(ValueError, match="requires a mesh"):
         ServeEngine(model, params, pcfg, mode="explicit")
     assert SERVE_MODES == ("gspmd", "explicit")
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: preemption, deadlines, bounded retry
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_clamps_to_max_context():
+    from repro.serve.engine import _bucket
+    assert _bucket(5) == 8
+    assert _bucket(12, hi=16) == 16
+    assert _bucket(12, hi=20) == 16   # pow2 still below the cap
+    assert _bucket(17, hi=20) == 20   # top bucket is exactly the cap
+    with pytest.raises(ValueError, match="max context"):
+        _bucket(21, hi=20)
+
+
+def test_serve_preemption_zero_lost_tokens(setup):
+    """Under page exhaustion the engine evicts the youngest active, re-queues
+    it with prompt+generated intact, and the resumed stream is token-exact
+    vs a pool that never had to preempt."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    pa = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+
+    big = ServeEngine(model, params,
+                      PagedCacheConfig(page_size=4, num_pages=16,
+                                       max_slots=2, max_seq=16))
+    big.submit(pa, max_new_tokens=8)
+    big.submit(pb, max_new_tokens=4)
+    ref = big.run()
+
+    # 4 pages: A (4+8 -> 3 pages) and B (4+4 -> 2 pages) cannot coexist
+    small = ServeEngine(model, params,
+                        PagedCacheConfig(page_size=4, num_pages=4,
+                                         max_slots=2, max_seq=16),
+                        preempt=True)
+    small.submit(pa, max_new_tokens=8)
+    small.submit(pb, max_new_tokens=4)
+    out, stats = small.run(collect_stats=True)
+
+    assert small.scheduler.preempted_total >= 1
+    assert sum(s["preempted"] for s in stats) == small.scheduler.preempted_total
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+def test_serve_preemption_bounded_per_request(setup):
+    """No request is evicted past max_preemptions — the livelock guard."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(model, params,
+                      PagedCacheConfig(page_size=4, num_pages=4,
+                                       max_slots=2, max_seq=16),
+                      preempt=True)
+    rids = [eng.submit(rng.integers(0, cfg.vocab_size, size=(4,))
+                       .astype(np.int32), max_new_tokens=8)
+            for _ in range(3)]
+    out = eng.run()
+    assert eng.scheduler.max_preemptions == 1
+    assert set(out) == set(rids)
+    for rid in rids:
+        assert out[rid].shape[0] == 4 + 8  # nobody lost tokens
+
+
+def test_serve_deadline_timeout_waiting_and_active(setup):
+    import time as _time
+    cfg, model, params = setup
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+
+    # expires while waiting: pool busy is not even required — the deadline
+    # check runs before admission
+    eng = ServeEngine(model, params, _pcfg())
+    eng.submit(prompt, max_new_tokens=4, deadline_s=1e-9)
+    req = eng.scheduler.waiting[0]
+    _time.sleep(0.01)
+    stats = eng.step()
+    assert req.done and req.finish_reason == "timeout"
+    assert stats["timeouts"] == 1 and req.generated == []
+
+    # expires mid-decode: partial generation is kept, slot recycles
+    eng2 = ServeEngine(model, params,
+                       PagedCacheConfig(page_size=4, num_pages=32,
+                                        max_slots=3, max_seq=128))
+    eng2.submit(prompt, max_new_tokens=64, deadline_s=0.05)
+    req2 = eng2.scheduler.waiting[0]
+    eng2.step()  # admit + prefill + first decode
+    assert req2.slot is not None
+    _time.sleep(0.06)
+    eng2.step()
+    assert req2.done and req2.finish_reason == "timeout"
+    assert 0 < len(req2.generated) < 64
+    assert req2.slot is None and eng2.alloc.free_slot_count == 3
+
+
+def test_serve_bounded_retry_rejects_head(setup):
+    """A head that cannot be admitted within admission_retries attempts is
+    finished with reason 'rejected' instead of blocking forever."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(10)
+    pa = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+    eng = ServeEngine(model, params,
+                      PagedCacheConfig(page_size=4, num_pages=8,
+                                       max_slots=1, max_seq=16),
+                      admission_retries=2)
+    ra = eng.submit(pa, max_new_tokens=12)  # holds the only slot 12 steps
+    rb = eng.submit(pb, max_new_tokens=4)
+    reqb = eng.scheduler.waiting[1]  # [0] is A, admitted on the first step
+    out, stats = eng.run(collect_stats=True)
+    assert reqb.finish_reason == "rejected"
+    assert sum(s["rejected"] for s in stats) == 1
+    assert out[ra].shape[0] == 4 + 12    # the active stream was untouched
+    np.testing.assert_array_equal(out[rb], pb)  # rejected: prompt only

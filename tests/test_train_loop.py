@@ -5,10 +5,12 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+from repro.checkpoint.manager import all_steps, restore
+from repro.comm.faults import FaultInjector, FaultSchedule
 from repro.configs import RunConfig, get_config, reduced
 from repro.data import DataConfig
 from repro.train.loop import InjectedFailure, TrainLoopConfig, train_loop
-from repro.train.straggler import StragglerMonitor
+from repro.train.straggler import POLICIES, StragglerMonitor
 
 
 def _cfgs(tmp_path, steps=14, every=5):
@@ -45,7 +47,76 @@ def test_straggler_monitor_flags():
         assert not mon.record(i, 0.1)
     assert mon.record(10, 0.5)           # 5x median -> flagged
     assert not mon.record(11, 0.15)
-    assert mon.flagged == [10]
+    assert list(mon.flagged) == [10]
     s = mon.summary()
     assert s["median_s"] == pytest.approx(0.1, rel=0.2)
     assert mon.deadline() == pytest.approx(0.2, rel=0.2)
+
+
+def test_straggler_policy_validated():
+    assert POLICIES == ("warn", "checkpoint", "retune")
+    with pytest.raises(ValueError, match="straggler policy"):
+        StragglerMonitor(policy="evict")
+    with pytest.raises(ValueError, match="straggler policy"):
+        train_loop(*_cfgs_noop(), TrainLoopConfig(
+            steps=1, straggler_policy="evict"))
+
+
+def _cfgs_noop():
+    cfg = reduced(get_config("llama3.2-3b"), layers=2, d_model=32)
+    run = RunConfig(learning_rate=1e-2, warmup_steps=2)  # no checkpointing
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=4, seq_len=32)
+    return cfg, run, data
+
+
+def test_forced_checkpoint_on_injected_straggler(tmp_path):
+    """An injected host delay blows the step deadline; under policy
+    'checkpoint' every flagged step forces an off-cadence save."""
+    cfg, run, data = _cfgs(tmp_path, steps=12, every=100)  # cadence never hits
+    inj = FaultInjector()
+    fault = FaultSchedule.degrade_window(inj, 9, 11, axis="x",
+                                         host_delay_s=0.3,
+                                         callsite="train.step")
+    hist = train_loop(cfg, run, data, TrainLoopConfig(
+        steps=12, straggler_policy="checkpoint", fault_schedule=fault))
+
+    flagged = hist["straggler"]["flagged"]
+    assert flagged and set(flagged) <= {9, 10}  # only the injected window
+    steps = all_steps(str(tmp_path / "ck"))
+    forced = [s for s in steps
+              if restore(str(tmp_path / "ck"), {}, step=s)[2].get("forced")]
+    assert forced == [s + 1 for s in flagged]  # saved right after each flag
+    assert steps[-1] == 12  # the final save still lands
+
+
+def test_retune_policy_routes_straggler_flags(tmp_path):
+    """Under policy 'retune' a flagged step goes to the controller's
+    on_straggler; nominal steps feed observe. Duck-typed controller — the
+    loop only needs observe/on_straggler/events."""
+
+    class _FakeController:
+        def __init__(self):
+            self.observed, self.straggled, self.events = [], [], []
+
+        def observe(self, step, duration):
+            self.observed.append(step)
+            return None
+
+        def on_straggler(self, step):
+            self.straggled.append(step)
+            return None
+
+    cfg, run, data = _cfgs_noop()
+    inj = FaultInjector()
+    fault = FaultSchedule.degrade_window(inj, 9, 11, axis="x",
+                                         host_delay_s=0.3,
+                                         callsite="train.step")
+    ctrl = _FakeController()
+    hist = train_loop(cfg, run, data, TrainLoopConfig(
+        steps=12, straggler_policy="retune", fault_schedule=fault,
+        retune=ctrl))
+
+    assert ctrl.straggled == hist["straggler"]["flagged"]
+    assert ctrl.straggled and set(ctrl.straggled) <= {9, 10}
+    assert sorted(ctrl.observed + ctrl.straggled) == list(range(12))
+    assert hist["retune_events"] is ctrl.events
