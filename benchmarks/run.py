@@ -48,6 +48,10 @@ One module per paper table/figure (DESIGN.md §6):
                    drift detection -> narrow retune -> mid-run schedule flip
                    (bit-exact, deterministic gate), plus straggler-flagged
                    train degradation and zero-lost-token serve preemption
+  failover_bench   beyond-paper hard-failure survival: link-down ->
+                   health-masked reroute (provably off the cut, bit-exact),
+                   rank loss -> elastic resume from a resharded checkpoint
+                   (bitwise vs control), and zero-lost-token serve drain
 """
 from __future__ import annotations
 
@@ -70,6 +74,7 @@ MODULES = [
     "overlap_bench",
     "serve_bench",
     "resilience_bench",
+    "failover_bench",
 ]
 
 ALIASES = {
@@ -80,6 +85,7 @@ ALIASES = {
     "lm": "lm_step_bench",
     "serve": "serve_bench",
     "resilience": "resilience_bench",
+    "failover": "failover_bench",
 }
 
 # primary collective op per module: --sweep-schedules runs the module once
@@ -102,6 +108,8 @@ SWEEP_OPS = {
     # the whole point is the *adaptive* auto path: a fixed-schedule sweep
     # would defeat the retune under test
     "resilience_bench": None,
+    # likewise: the health-masked re-resolution IS the subject under test
+    "failover_bench": None,
 }
 
 # modules with a software-pipeline dimension: --sweep-schedules also runs

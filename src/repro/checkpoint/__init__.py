@@ -1,5 +1,6 @@
 from repro.checkpoint.manager import (  # noqa: F401
     CheckpointManager,
+    CheckpointMismatchError,
     latest_step,
     restore,
     save,

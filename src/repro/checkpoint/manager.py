@@ -30,6 +30,36 @@ import numpy as np
 _SEP = "/"
 
 
+class CheckpointMismatchError(ValueError):
+    """A checkpoint does not fit the requested structure.
+
+    Raised by :func:`restore` with the *complete* diagnosis — every
+    missing leaf (in ``like`` but not on disk), unexpected leaf (on disk
+    but not in ``like``), and shape mismatch across all trees — instead
+    of a bare ``KeyError`` on the first absent array, so elastic-resume
+    failures (restoring onto a differently-structured model) are
+    diagnosable from the message alone.
+    """
+
+    def __init__(self, missing, unexpected, shape_mismatches):
+        self.missing = tuple(missing)
+        self.unexpected = tuple(unexpected)
+        self.shape_mismatches = tuple(shape_mismatches)
+        parts = []
+        if self.missing:
+            parts.append("missing from checkpoint: "
+                         + ", ".join(self.missing))
+        if self.unexpected:
+            parts.append("unexpected in checkpoint: "
+                         + ", ".join(self.unexpected))
+        if self.shape_mismatches:
+            parts.append("shape mismatches: " + ", ".join(
+                f"{key} saved {tuple(got)} != expected {tuple(want)}"
+                for key, got, want in self.shape_mismatches))
+        super().__init__("checkpoint does not match the requested "
+                         "structure — " + "; ".join(parts))
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -92,12 +122,61 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _reshard_shardings(like: Dict[str, object], mesh, axis: str
+                       ) -> Dict[str, object]:
+    """Per-tree NamedSharding pytrees for restoring onto ``mesh``: a
+    TrainState gets the explicit whole-model layout (params through
+    :func:`repro.train.step.whole_model_param_specs`, opt moments
+    mirroring the params, scalars replicated — the same spec construction
+    the explicit step's shard_map uses), a bare params dict the param
+    specs alone, anything else fully replicated."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.step import TrainState, whole_model_param_specs
+
+    def is_spec(x):
+        return isinstance(x, P)
+
+    out = {}
+    for name, tree in like.items():
+        if isinstance(tree, TrainState):
+            pspec = whole_model_param_specs(tree.params, axis)
+            spec = TrainState(
+                params=pspec,
+                opt={"mu": jax.tree.map(lambda s: s, pspec, is_leaf=is_spec),
+                     "nu": jax.tree.map(lambda s: s, pspec, is_leaf=is_spec),
+                     "count": P()},
+                step=P(),
+                error=(jax.tree.map(lambda _: P(), tree.error)
+                       if tree.error is not None else None))
+        elif isinstance(tree, dict) and "blocks" in tree:
+            spec = whole_model_param_specs(tree, axis)
+        else:
+            spec = jax.tree.map(lambda _: P(), tree)
+        out[name] = jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                 is_leaf=is_spec)
+    return out
+
+
 def restore(directory: str, like: Dict[str, object], *, step: Optional[int] = None,
-            shardings: Optional[Dict[str, object]] = None) -> Tuple[int, Dict[str, object], dict]:
+            shardings: Optional[Dict[str, object]] = None,
+            reshard_to=None, axis: str = "x") -> Tuple[int, Dict[str, object], dict]:
     """Restore (step, trees, extra). ``like`` gives the pytree structure;
     ``shardings`` optionally maps tree names to sharding pytrees — this is the
     elastic path: the stored global arrays are ``device_put`` onto the *new*
-    mesh regardless of the mesh they were saved under."""
+    mesh regardless of the mesh they were saved under.
+
+    ``reshard_to`` (a jax Mesh) derives those shardings automatically via
+    :func:`_reshard_shardings` — the rank-loss recovery path: the survivor
+    mesh differs from the one the checkpoint was saved under, and the
+    restored state must land sharded for the explicit whole-model step
+    (MoE expert leaves over ``axis``, everything else replicated).
+    Explicit ``shardings`` win when both are given.
+
+    A structure mismatch raises :class:`CheckpointMismatchError` with the
+    complete list of missing / unexpected / shape-mismatched leaves.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -105,28 +184,47 @@ def restore(directory: str, like: Dict[str, object], *, step: Optional[int] = No
     d = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if shardings is None and reshard_to is not None:
+        shardings = _reshard_shardings(like, reshard_to, axis)
 
     out = {}
+    missing: List[str] = []
+    unexpected: List[str] = []
+    mismatched: List[Tuple[str, tuple, tuple]] = []
     for name, tree in like.items():
         data = np.load(os.path.join(d, f"{name}.npz"))
         leaves_like, treedef = jax.tree_util.tree_flatten_with_path(tree)
         new_leaves = []
+        want = set()
+        ok = True
         for path, leaf in leaves_like:
             keys = []
             for e in path:
                 keys.append(str(e.key) if hasattr(e, "key") else str(getattr(e, "idx", e)))
             key = _SEP.join(keys)
+            want.add(key)
+            if key not in data:
+                missing.append(f"{name}:{key}")
+                ok = False
+                continue
             arr = data[key]
             if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(
-                    f"checkpoint leaf {name}:{key} shape {arr.shape} != "
-                    f"expected {leaf.shape}")
+                mismatched.append((f"{name}:{key}", tuple(arr.shape),
+                                   tuple(leaf.shape)))
+                ok = False
+                continue
             new_leaves.append(arr)
+        unexpected += sorted(f"{name}:{k}" for k in data.files
+                             if k not in want)
+        if not ok:
+            continue
         restored = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(tree), new_leaves)
         if shardings and name in shardings:
             restored = jax.device_put(restored, shardings[name])
         out[name] = restored
+    if missing or mismatched:
+        raise CheckpointMismatchError(missing, unexpected, mismatched)
     return step, out, manifest.get("extra", {})
 
 
@@ -154,8 +252,10 @@ class CheckpointManager:
                    extra: Optional[dict] = None) -> Optional[str]:
         return self.save(step, trees, extra=extra)
 
-    def restore_latest(self, like, shardings=None):
-        return restore(self.directory, like, shardings=shardings)
+    def restore_latest(self, like, shardings=None, *, reshard_to=None,
+                       axis: str = "x"):
+        return restore(self.directory, like, shardings=shardings,
+                       reshard_to=reshard_to, axis=axis)
 
     @property
     def has_checkpoint(self) -> bool:

@@ -25,6 +25,7 @@ from repro.comm.faults import (  # noqa: F401
     FaultInjector,
     FaultSchedule,
     LinkFault,
+    RankLostError,
 )
 from repro.comm.retune import (  # noqa: F401
     RetuneController,

@@ -36,7 +36,9 @@ op / schedule         hops x alpha                +  wire bytes / beta
 bcast/chain           (n-1)                          (n-1) S
 bcast/native          sync + n/2                     (n-1) S / 2
 bcast/ring2d          2(n-1)                         2 S (n-1)/n
+bcast/chain_rooted    2(n-1)                         2(n-1) S
 allreduce/chain       (n-1)                          (n-1) S
+allreduce/chain_rooted  2(n-1)                       2(n-1) S
 allreduce/native      sync + (n-1)                   (n-1)/n S
 allreduce/rs_ag       2(n-1)                         2 S (n-1)/n
 allreduce/ring2d      sum over torus dims of the per-dim rs_ag ring
@@ -151,6 +153,16 @@ def _segs_bcast_chain(S, axes, hw):
     return [(n - 1, (n - 1) * S, "ici")]
 
 
+def _segs_chain_rooted(S, axes, hw):
+    # bidirectional rooted chain away from a ring break: both arms relay
+    # from the source, worst-case n-1 hops each way, every surviving wire
+    # carrying S once per direction. Priced above plain chain (2x hops and
+    # wire) so it never wins on a healthy ring — it exists to stay finite
+    # when one link is down.
+    n = _ranks(axes)
+    return [(2 * (n - 1), 2 * (n - 1) * S, "ici")]
+
+
 def _segs_bcast_native(S, axes, hw):
     # bidirectional all-gather + select: half the hops, both link directions
     n = _ranks(axes)
@@ -230,10 +242,12 @@ def _segs_transpose_ring2d(S, axes, hw):
 
 _SEGS: Dict[Tuple[str, str], Callable] = {
     ("bcast", "chain"): _segs_bcast_chain,
+    ("bcast", "chain_rooted"): _segs_chain_rooted,
     ("bcast", "native"): _segs_bcast_native,
     ("bcast", "ring2d"): _segs_bcast_ring2d,
     ("bcast", "staged"): _staged_segs,
     ("allreduce", "chain"): _segs_allreduce_chain,
+    ("allreduce", "chain_rooted"): _segs_chain_rooted,
     ("allreduce", "native"): _segs_allreduce_native,
     ("allreduce", "rs_ag"): _segs_allreduce_rs_ag,
     ("allreduce", "ring2d"): _segs_allreduce_ring2d,
@@ -263,6 +277,37 @@ def segments(op: str, schedule: str, nbytes: float,
     if any(a.kind == "staging" for a in axes):
         return _staged_segs(nbytes, axes, hw)
     return fn(float(nbytes), tuple(axes), hw)
+
+
+def route_links(op: str, schedule: str, axes: Sequence[AxisTopology], *,
+                health: frozenset = frozenset()) -> Optional[frozenset]:
+    """The set of ``(axis, hop)`` physical links one schedule run may
+    traverse, or ``None`` for schedules the model has no formula for
+    (nothing provable about their route).
+
+    ``staged`` — and any run over a staging axis — touches no ICI link:
+    its bytes ride PCIe + host MPI, the paper's escape-hatch network.
+    ``chain_rooted`` cuts the ring at the down hop named in ``health``
+    (the wraparound hop ``size-1`` when clean) and provably never crosses
+    it; additional down hops on the same axis stay in its route, so a
+    doubly-broken ring still prices as infinite. Every other priced ICI
+    schedule is conservative: it may ride any link of its axes (XLA
+    routes ``native``/``direct`` itself, and the ring pipelines touch
+    every wire of the ring).
+    """
+    if (op, schedule) not in _SEGS:
+        return None
+    if schedule == "staged" or any(a.kind == "staging" for a in axes):
+        return frozenset()
+    links = set()
+    for a in axes:
+        axis_links = set(a.links())
+        if schedule == "chain_rooted":
+            down = sorted(h for (nm, h) in health if nm == a.name)
+            cut = down[0] if down else a.size - 1
+            axis_links.discard((a.name, cut))
+        links |= axis_links
+    return frozenset(links)
 
 
 def _seg_time(seg: Segment, hw: HardwareModel) -> float:
@@ -464,16 +509,29 @@ class CostModel:
     Choices are memoized by ``(op, nbytes, axis signature, callsite)`` —
     resolution is a pure function of static data, hence identical across
     processes.
+
+    ``health`` is the link-health mask — ``(axis, hop)`` pairs that are
+    hard-down (:meth:`repro.comm.faults.FaultInjector.down_links`). Any
+    schedule whose provable route (:func:`route_links`) crosses a down
+    link prices as infinite, so resolution excludes it; a down ring falls
+    through to ``chain_rooted`` (finite away from the cut) and, failing
+    that, the host-``staged`` path, which touches no ICI link at all.
     """
     hw: HardwareModel = TPU_V5E
     table: Optional[TuningTable] = None
+    health: frozenset = frozenset()
     _cache: Dict[Tuple[str, int, str, Optional[str]], str] = \
         field(default_factory=dict, repr=False)
 
     def cost(self, op: str, schedule: str, nbytes: float,
              axes: Sequence[AxisTopology]) -> float:
         """Predicted seconds; ``inf`` for schedules the model cannot price
-        (e.g. user-registered ones with no formula — never chosen by auto)."""
+        (e.g. user-registered ones with no formula — never chosen by auto)
+        and for any schedule whose route crosses a link in ``health``."""
+        if self.health:
+            links = route_links(op, schedule, axes, health=self.health)
+            if links is None or links & self.health:
+                return float("inf")
         segs = segments(op, schedule, nbytes, axes, self.hw)
         if segs is None:
             return float("inf")
@@ -529,6 +587,9 @@ class CostModel:
                 from repro.comm.engine import schedules_for
                 if name not in schedules_for(op) or name in LOSSY_SCHEDULES:
                     name = None  # stale table entry: fall back to analytic
+            if name is not None and self.health and not math.isfinite(
+                    self.cost(op, name, nbytes, axes)):
+                name = None  # measured winner routes through a down link
         if name is None:
             ranked = self.rank(op, nbytes, axes)
             name = ranked[0][0] if ranked else None

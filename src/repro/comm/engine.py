@@ -56,6 +56,14 @@ Schedules
             feedback is carried by the caller — see
             :func:`repro.comm.compression.compressed_psum`).
 ``direct``  point-to-point ``ppermute`` (ring_exchange / grid_transpose).
+``chain_rooted``  the dead-link escape route for bcast/allreduce: a
+            bidirectional store-and-forward chain rooted so neither arm
+            crosses the ring's cut hop (the hard-down link in the cost
+            model's health mask; the wraparound hop when clean). Priced
+            at 2x chain so it never wins on a healthy ring — resolution
+            falls through to it when a down link prices everything else
+            infinite (and to ``staged``, which touches no ICI link, when
+            even the rooted chain cannot avoid the break).
 
 Registering a new schedule::
 
@@ -205,6 +213,46 @@ def _bcast_gather(engine, val, axis, src):
     return jnp.take(allv, src, axis=0)
 
 
+def _cut_hop(engine, axis, n: int) -> int:
+    """The hop the rooted chain must not cross — static at trace time.
+
+    The smallest hard-down hop of ``axis`` in the engine's cost-model
+    health mask (:meth:`repro.comm.autotune.CostModel`), else the
+    wraparound hop ``n-1``: a clean rooted chain simply avoids the
+    wraparound wire. With several down hops on one axis the chain can
+    only avoid the first; the others stay in its priced route, so
+    resolution never picks it there (:func:`repro.comm.autotune
+    .route_links`)."""
+    model = engine._model()
+    health = getattr(model, "health", None) or frozenset()
+    down = sorted(h for (a, h) in health if a == axis)
+    return down[0] if down else n - 1
+
+
+@register_schedule("bcast", "chain_rooted")
+def _bcast_chain_rooted(engine, val, axis, src):
+    # Bidirectional chain rooted at ``src``, re-indexed so path position 0
+    # sits just past the cut and position n-1 just before it: the forward
+    # arm relays src -> tail, the backward arm src -> head, and the masks
+    # make the two cut-crossing adoptions impossible (pos 0 never takes a
+    # forward hop, pos n-1 never a backward one) — so no adopted value
+    # ever traversed the down link, provably.
+    n = axis_size(axis)
+    if n == 1:
+        return val
+    cut = _cut_hop(engine, axis, n)
+    idx = lax.axis_index(axis)
+    pos = (idx - (cut + 1)) % n
+    spos = (src - (cut + 1)) % n
+    f = b = val
+    for _ in range(n - 1):
+        nf = _ring_shift(f, axis, +1)
+        f = jnp.where(pos > spos, nf, f)
+        nb = _ring_shift(b, axis, -1)
+        b = jnp.where(pos < spos, nb, b)
+    return jnp.where(pos < spos, b, f)
+
+
 @register_schedule("bcast", "ring2d")
 def _bcast_ring2d(engine, val, axis, src):
     # torus-aware two-phase ring bcast (scatter + ring all-gather): the
@@ -312,6 +360,40 @@ def _allreduce_chain(engine, x, axis):
         buf = _ring_shift(buf, axis, +1)
         acc = acc + buf
     return acc
+
+
+@register_schedule("allreduce", "chain_rooted")
+def _allreduce_chain_rooted(engine, x, axis):
+    # Dead-link allreduce: reduce along the open path to its head, then
+    # chain-broadcast the total back. Path position 0 sits just past the
+    # cut (see _cut_hop); backward shifts bring pos p the payload of pos
+    # p+r, masked to zero whenever p+r walked off the path end — i.e.
+    # whenever that contribution would have crossed the down link — so
+    # the head's accumulator is the exact left-to-right path-order sum
+    # and nothing adopted ever traversed the cut. The return broadcast is
+    # the forward arm of the rooted chain (pos 0 never adopts), leaving
+    # every rank with the head's bitwise-identical total.
+    if isinstance(axis, (tuple, list)):
+        for ax in axis:
+            x = _allreduce_chain_rooted(engine, x, ax)
+        return x
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    cut = _cut_hop(engine, axis, n)
+    idx = lax.axis_index(axis)
+    pos = (idx - (cut + 1)) % n
+    zeros = jnp.zeros_like(x)
+    acc = x
+    buf = x
+    for r in range(1, n):
+        buf = _ring_shift(buf, axis, -1)
+        acc = acc + jnp.where(pos + r <= n - 1, buf, zeros)
+    f = acc
+    for _ in range(n - 1):
+        nf = _ring_shift(f, axis, +1)
+        f = jnp.where(pos > 0, nf, f)
+    return f
 
 
 @register_schedule("allreduce", "staged")
@@ -618,7 +700,8 @@ class CollectiveEngine:
         from repro.comm.autotune import default_cost_model
         return default_cost_model()
 
-    def invalidate_resolutions(self, *, table=None, hw=None) -> None:
+    def invalidate_resolutions(self, *, table=None, hw=None,
+                               health=None) -> None:
         """Drop every memoized ``(op, nbytes, axis, callsite)`` resolution
         so the next ``schedule="auto"`` lookup re-prices — the adaptive
         retune hook (:mod:`repro.comm.retune`).
@@ -628,7 +711,11 @@ class CollectiveEngine:
         (an in-run re-measurement); ``hw`` swaps the
         :class:`~repro.comm.types.HardwareModel` the analytic ranking
         prices on (a degraded-link view from
-        :meth:`repro.comm.faults.FaultInjector.hardware_view`). Mutates the
+        :meth:`repro.comm.faults.FaultInjector.hardware_view`); ``health``
+        swaps the link-health mask (``(axis, hop)`` pairs that are hard
+        down, from :meth:`repro.comm.faults.FaultInjector.down_links` —
+        pass ``frozenset()`` to declare every link healthy again), so
+        resolution excludes any route crossing a down link. Mutates the
         engine's cost model — the process default when no explicit
         ``cost_model`` was given — never the frozen engine, so in-flight
         references stay valid. Already-traced jitted programs keep the
@@ -639,6 +726,8 @@ class CollectiveEngine:
             model.table = table
         if hw is not None:
             model.hw = hw
+        if health is not None:
+            model.health = frozenset(health)
         model._cache.clear()
 
     def _auto_choice(self, op: str, nbytes: Optional[int], axis,

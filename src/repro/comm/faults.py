@@ -1,4 +1,4 @@
-"""Deterministic fault injection: degraded links for the resilience layer.
+"""Deterministic fault injection: degraded/down links and lost ranks.
 
 The paper's barrier discipline ("the slowest execution time among all
 FPGAs is reported") means one degraded link paces the whole machine, and
@@ -26,10 +26,21 @@ all driven by the same :class:`FaultInjector`:
   :class:`~repro.train.straggler.StragglerMonitor` and the serve engine
   observe degradation as wall-clock drift.
 
-:class:`FaultSchedule` scripts a timeline over the three ("degrade link
-at step k, heal at step m"), consumable by the train loop
-(``TrainLoopConfig.fault_schedule``), the serve engine
-(``ServeEngine(fault_schedule=...)``), and ``benchmarks/resilience_bench``.
+Beyond degradation, the same injector models **hard** failures — the
+circuit-switched network's binary mode. :meth:`FaultInjector.down_link`
+marks a link unestablishable; the mask (:meth:`FaultInjector.down_links`)
+reaches the cost model as ``CostModel.health`` so any route traversing a
+down link prices as infinite and resolution reroutes (``chain_rooted``)
+or falls back to ``staged``. :meth:`FaultInjector.fail_rank` declares a
+device lost; consuming loops raise :class:`RankLostError` and recover
+elastically (shrunken mesh + resharded checkpoint restore).
+
+:class:`FaultSchedule` scripts a timeline over all of these ("degrade
+link at step k, heal at step m", "down at k", "fail_rank at k"),
+consumable by the train loop (``TrainLoopConfig.fault_schedule``), the
+serve engine (``ServeEngine(fault_schedule=...)``),
+``benchmarks/resilience_bench``, ``benchmarks/failover_bench``, and —
+via :meth:`FaultSchedule.parse` — the ``--fault-schedule`` CLI flags.
 
 Everything is seedable and deterministic: with ``jitter=0`` (default)
 two runs of the same schedule inject byte-identical perturbations.
@@ -46,24 +57,48 @@ import numpy as np
 from repro.comm.topology import AxisTopology
 from repro.comm.types import TPU_V5E, HardwareModel
 
-FAULT_ACTIONS = ("degrade", "heal", "delay", "clear_delay")
+FAULT_ACTIONS = ("degrade", "heal", "delay", "clear_delay", "down",
+                 "fail_rank")
+
+
+class RankLostError(RuntimeError):
+    """A scripted rank loss fired: the mesh as built no longer exists.
+
+    Raised by loops that consume a :class:`FaultSchedule` when
+    :meth:`FaultInjector.lost_ranks` becomes non-empty. Carries enough to
+    rebuild: which ranks died and at which loop step.
+    """
+
+    def __init__(self, ranks, step: int):
+        self.ranks = tuple(sorted(ranks))
+        self.step = int(step)
+        super().__init__(
+            f"rank(s) {self.ranks} lost at step {self.step}")
 
 
 @dataclass(frozen=True)
 class LinkFault:
-    """One degraded link: hop ``hop`` of mesh axis ``axis``.
+    """One faulted link: hop ``hop`` of mesh axis ``axis``.
 
-    ``alpha_scale`` multiplies the per-hop latency, ``beta_scale`` divides
-    the link bandwidth. Under the barrier discipline every ring pass on the
-    faulted axis is paced by the slow link: latency is paid per traversal
-    (additive) while a pipelined transfer's steady-state throughput
-    collapses to the slowest link's (bottleneck) — so the degraded view
-    reprices the whole axis at the faulted numbers.
+    Soft fault (``down=False``): ``alpha_scale`` multiplies the per-hop
+    latency, ``beta_scale`` divides the link bandwidth. Under the barrier
+    discipline every ring pass on the faulted axis is paced by the slow
+    link: latency is paid per traversal (additive) while a pipelined
+    transfer's steady-state throughput collapses to the slowest link's
+    (bottleneck) — so the degraded view reprices the whole axis at the
+    faulted numbers.
+
+    Hard fault (``down=True``): the circuit cannot be established at all
+    (the paper's circuit-switched network is binary — a circuit exists or
+    it does not). A down link never contributes scales; it surfaces as a
+    link-health mask (:meth:`FaultInjector.down_links`) that the cost
+    model prices as infinite and schedule resolution must route around.
     """
     axis: str
     hop: int = 0
     alpha_scale: float = 1.0
     beta_scale: float = 1.0
+    down: bool = False
 
     def __post_init__(self):
         if self.alpha_scale < 1.0 or self.beta_scale < 1.0:
@@ -99,6 +134,7 @@ class FaultInjector:
         self._rng = np.random.default_rng(seed)
         self._faults: Dict[Tuple[str, int], LinkFault] = {}
         self._host_delays: Dict[Optional[str], float] = {}
+        self._lost_ranks: set = set()
 
     # -- fault state --------------------------------------------------------
 
@@ -110,6 +146,36 @@ class FaultInjector:
                           beta_scale=beta_scale)
         self._faults[(axis, hop)] = fault
         return fault
+
+    def down_link(self, axis: str, hop: int = 0) -> LinkFault:
+        """Mark ``(axis, hop)`` hard-down: no circuit, route around it."""
+        fault = LinkFault(axis=axis, hop=hop, down=True)
+        self._faults[(axis, hop)] = fault
+        return fault
+
+    def down_links(self, axes: Optional[Sequence] = None) -> frozenset:
+        """The link-health mask: ``frozenset`` of ``(axis, hop)`` pairs
+        currently hard-down on the named axes (all axes when ``None``).
+        Link ``hop`` is the wire between ranks ``hop`` and ``hop+1 mod n``
+        on that axis, severed in both directions."""
+        names = _axis_names(axes)
+        return frozenset((f.axis, f.hop) for f in self._faults.values()
+                         if f.down and (names is None or f.axis in names))
+
+    def fail_rank(self, rank: int) -> None:
+        """Declare device ``rank`` (mesh-linear index) lost. Loops that
+        consume a schedule observe :attr:`lost_ranks` and raise
+        :class:`RankLostError` to trigger elastic recovery."""
+        self._lost_ranks.add(int(rank))
+
+    def restore_ranks(self) -> None:
+        """Forget lost ranks — called once recovery has rebuilt the mesh
+        on the survivors, so the resumed loop does not re-fire."""
+        self._lost_ranks.clear()
+
+    @property
+    def lost_ranks(self) -> frozenset:
+        return frozenset(self._lost_ranks)
 
     def heal(self, axis: Optional[str] = None,
              hop: Optional[int] = None) -> None:
@@ -123,7 +189,8 @@ class FaultInjector:
 
     @property
     def active(self) -> bool:
-        return bool(self._faults) or any(self._host_delays.values())
+        return (bool(self._faults) or any(self._host_delays.values())
+                or bool(self._lost_ranks))
 
     @property
     def faults(self) -> Tuple[LinkFault, ...]:
@@ -136,7 +203,7 @@ class FaultInjector:
         means every axis."""
         names = _axis_names(axes)
         hit = [f for f in self._faults.values()
-               if names is None or f.axis in names]
+               if not f.down and (names is None or f.axis in names)]
         return (max((f.alpha_scale for f in hit), default=1.0),
                 max((f.beta_scale for f in hit), default=1.0))
 
@@ -155,10 +222,12 @@ class FaultInjector:
 
     def cost_model_view(self, hw: Optional[HardwareModel] = None):
         """A fresh analytic :class:`~repro.comm.autotune.CostModel` on the
-        degraded hardware. Deliberately table-free: measured tuning entries
+        degraded hardware, carrying the link-health mask so down links
+        price as infinite. Deliberately table-free: measured tuning entries
         predate the fault and would report the clean winners."""
         from repro.comm.autotune import CostModel
-        return CostModel(hw=self.hardware_view(hw), table=None)
+        return CostModel(hw=self.hardware_view(hw), table=None,
+                         health=self.down_links())
 
     def extra_time(self, op: str, schedule: str, nbytes: float,
                    axes: Sequence[AxisTopology],
@@ -166,9 +235,16 @@ class FaultInjector:
         """Injected wall-clock seconds for one ``(op, schedule)`` run over
         ``axes``: degraded-minus-clean analytic cost, times ``delay_scale``
         (plus seeded jitter). Zero when no fault touches the axes or the
-        model has no formula for the schedule."""
-        from repro.comm.autotune import _seg_time, segments
+        model has no formula for the schedule. Infinite when the run's
+        route traverses a hard-down link — a circuit that cannot be
+        established never completes."""
+        from repro.comm.autotune import _seg_time, route_links, segments
         hw = hw or self.hw
+        down = self.down_links(axes)
+        if down:
+            links = route_links(op, schedule, axes, health=down)
+            if links is None or links & down:
+                return float("inf")
         dhw = self.hardware_view(hw, axes)
         if dhw is hw:
             return 0.0
@@ -262,8 +338,10 @@ class FaultEvent:
     """One scripted action at loop step ``step``.
 
     ``action`` is one of :data:`FAULT_ACTIONS`: ``degrade`` installs a
-    :class:`LinkFault` on ``(axis, hop)``; ``heal`` removes it; ``delay`` /
-    ``clear_delay`` manage a host-side stall for ``callsite``.
+    :class:`LinkFault` on ``(axis, hop)``; ``down`` marks that link
+    hard-down; ``heal`` removes either; ``delay`` / ``clear_delay`` manage
+    a host-side stall for ``callsite``; ``fail_rank`` declares mesh-linear
+    device ``rank`` lost.
     """
     step: int
     action: str
@@ -273,6 +351,7 @@ class FaultEvent:
     beta_scale: float = 1.0
     seconds: float = 0.0
     callsite: Optional[str] = None
+    rank: int = 0
 
     def __post_init__(self):
         if self.action not in FAULT_ACTIONS:
@@ -316,22 +395,107 @@ class FaultSchedule:
                        FaultEvent(end, "clear_delay", callsite=callsite)]
         return cls(injector, events)
 
+    @classmethod
+    def down_window(cls, injector: FaultInjector, start: int, end: int, *,
+                    axis: str = "x", hop: int = 0) -> "FaultSchedule":
+        """Hard variant of :meth:`degrade_window`: link down at ``start``,
+        restored (cable replaced) at ``end``."""
+        if end <= start:
+            raise ValueError(f"down window [{start}, {end}) is empty")
+        return cls(injector, [FaultEvent(start, "down", axis=axis, hop=hop),
+                              FaultEvent(end, "heal", axis=axis, hop=hop)])
+
+    @classmethod
+    def rank_loss(cls, injector: FaultInjector, step: int, *,
+                  rank: int) -> "FaultSchedule":
+        """Lose mesh-linear device ``rank`` at ``step``."""
+        return cls(injector, [FaultEvent(step, "fail_rank", rank=rank)])
+
+    @classmethod
+    def parse(cls, injector: FaultInjector, spec: str) -> "FaultSchedule":
+        """Build a schedule from a CLI spec string.
+
+        Grammar: events separated by ``;``, each
+        ``action@start[-end][:key=value,...]`` —
+
+        * ``degrade@5-20:axis=x,hop=1,beta_scale=64`` — soft window
+          (``-end`` appends the matching ``heal``);
+        * ``down@5-20:axis=x,hop=3`` — hard-down window;
+        * ``delay@5-20:seconds=0.05,callsite=train.step`` — host stall
+          window (``-end`` appends ``clear_delay``);
+        * ``fail_rank@12:rank=3`` — rank loss (no window form).
+        """
+        events: List[FaultEvent] = []
+        for part in spec.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            head, _, tail = part.partition(":")
+            action, at, when = head.partition("@")
+            action = action.strip()
+            if action not in FAULT_ACTIONS or not at:
+                raise ValueError(
+                    f"bad fault event {part!r}: want "
+                    f"action@start[-end][:k=v,...] with action in "
+                    f"{FAULT_ACTIONS}")
+            start_s, _, end_s = when.partition("-")
+            start = int(start_s)
+            end = int(end_s) if end_s else None
+            kw: Dict[str, object] = {}
+            for item in filter(None, (s.strip() for s in tail.split(","))):
+                k, _, v = item.partition("=")
+                if k in ("hop", "rank"):
+                    kw[k] = int(v)
+                elif k in ("alpha_scale", "beta_scale", "seconds"):
+                    kw[k] = float(v)
+                elif k in ("axis", "callsite"):
+                    kw[k] = v
+                else:
+                    raise ValueError(f"unknown fault spec key {k!r} "
+                                     f"in {part!r}")
+            events.append(FaultEvent(start, action, **kw))
+            if end is not None:
+                if action in ("degrade", "down"):
+                    events.append(FaultEvent(
+                        end, "heal", axis=kw.get("axis", "x"),
+                        hop=kw.get("hop", 0)))
+                elif action == "delay":
+                    events.append(FaultEvent(
+                        end, "clear_delay", callsite=kw.get("callsite")))
+                else:
+                    raise ValueError(
+                        f"{action!r} does not take a window: {part!r}")
+        return cls(injector, events)
+
     def apply(self, step: int) -> List[FaultEvent]:
-        """Fire every event scheduled for ``step``; returns them."""
+        """Fire every event scheduled for ``step``; returns them.
+
+        Soft events are effect-idempotent (re-applying a fired step
+        overwrites the same fault, never stacks it), so they may re-fire.
+        ``fail_rank`` is strictly one-shot: a loop resumed from a
+        checkpoint (elastic recovery re-enters the step range) must not
+        re-lose the rank it just recovered from.
+        """
         fired = []
         for e in self.events:
             if e.step != step:
+                continue
+            if e.action == "fail_rank" and any(a is e for a in self.applied):
                 continue
             if e.action == "degrade":
                 self.injector.degrade_link(e.axis, e.hop,
                                            alpha_scale=e.alpha_scale,
                                            beta_scale=e.beta_scale)
+            elif e.action == "down":
+                self.injector.down_link(e.axis, e.hop)
             elif e.action == "heal":
                 self.injector.heal(e.axis, e.hop)
             elif e.action == "delay":
                 self.injector.add_host_delay(e.callsite, e.seconds)
-            else:  # clear_delay
+            elif e.action == "clear_delay":
                 self.injector.clear_host_delay(e.callsite)
+            else:  # fail_rank
+                self.injector.fail_rank(e.rank)
             fired.append(e)
             self.applied.append(e)
         return fired

@@ -24,7 +24,10 @@ that drifted) are re-resolved. Two refresh paths compose:
   :class:`~repro.comm.types.HardwareModel` (link telemetry; in tests and
   benchmarks, :meth:`repro.comm.faults.FaultInjector.hardware_view`). The
   engine's analytic ranking is re-priced on it. Deterministic — this is
-  what the CI gate asserts on.
+  what the CI gate asserts on. ``health_probe`` is its hard-failure
+  sibling: a callable returning the current link-health mask (in tests,
+  :meth:`repro.comm.faults.FaultInjector.down_links`), so a retune also
+  excludes every route crossing a link that is *gone*, not just slow.
 * ``measure=True`` — a narrow :func:`~repro.comm.autotune.autotune_mesh`
   ladder over only the hot callsites' tagged patterns, at sizes bracketing
   their live payloads; the refreshed winners are merged over the engine's
@@ -122,6 +125,9 @@ class RetuneController:
     ``cooldown``     observations ignored after each retune (lets the new
                      schedule's timings settle before re-arming decisions).
     ``hw_probe``     optional ``() -> HardwareModel`` link telemetry.
+    ``health_probe`` optional ``() -> frozenset`` of hard-down ``(axis,
+                     hop)`` links (the injector's ``down_links``); fed to
+                     ``invalidate_resolutions(health=...)`` on retune.
     ``measure``      run the narrow measured ladder on retune.
     ``table_path``   where to persist the merged table after a measured
                      retune (None = in-memory only).
@@ -130,7 +136,9 @@ class RetuneController:
     def __init__(self, engine, watched: Sequence[Watched], *,
                  drift_factor: float = 1.75, recent: int = 3,
                  min_baseline: int = 5, cooldown: int = 8,
-                 hw_probe: Optional[Callable] = None, measure: bool = False,
+                 hw_probe: Optional[Callable] = None,
+                 health_probe: Optional[Callable] = None,
+                 measure: bool = False,
                  sizes: Optional[Sequence[int]] = None, reps: int = 2,
                  quick: bool = True, table_path=None, verbose: bool = False):
         if drift_factor <= 1.0:
@@ -145,6 +153,7 @@ class RetuneController:
         self.min_baseline = int(min_baseline)
         self.cooldown = int(cooldown)
         self.hw_probe = hw_probe
+        self.health_probe = health_probe
         self.measure = measure
         self.sizes = tuple(sizes) if sizes is not None else None
         self.reps = int(reps)
@@ -220,6 +229,8 @@ class RetuneController:
         kwargs: Dict[str, object] = {}
         if self.hw_probe is not None:
             kwargs["hw"] = self.hw_probe()
+        if self.health_probe is not None:
+            kwargs["health"] = frozenset(self.health_probe())
         if self.measure:
             kwargs["table"] = self._measure_hot(hot)
         self.engine.invalidate_resolutions(**kwargs)

@@ -42,6 +42,15 @@ class AxisTopology:
     def perm(self, shift: int = 1) -> List[Tuple[int, int]]:
         return ring_perm(self.size, shift)
 
+    def links(self) -> Tuple[Tuple[str, int], ...]:
+        """Every physical link of this axis as ``(name, hop)`` ids — hop
+        ``h`` is the bidirectional wire between ranks ``h`` and
+        ``h+1 mod size``. A staging axis has no ICI links (its bytes ride
+        PCIe + host MPI), so it reports none."""
+        if self.kind == "staging":
+            return ()
+        return tuple((self.name, h) for h in range(self.size))
+
 
 @dataclass(frozen=True)
 class MeshTopology:

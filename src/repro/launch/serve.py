@@ -57,8 +57,11 @@ def _legacy(model, params, cfg, args):
 
 def _paged(model, params, cfg, args):
     from repro.compat import make_mesh
+    from repro.launch.train import parse_fault_args
     from repro.models.kvcache import PagedCacheConfig
     from repro.serve import ServeEngine
+
+    fault = parse_fault_args(args.fault_schedule, args.fail_rank)
 
     max_seq = args.prompt_len + args.max_new
     slots = max(min(args.requests, len(jax.devices()) * 2), 1)
@@ -82,7 +85,8 @@ def _paged(model, params, cfg, args):
                       prefill_token_budget=args.prefill_budget,
                       eos_id=args.eos_id, temperature=args.temperature,
                       preempt=args.preempt,
-                      admission_retries=args.admission_retries)
+                      admission_retries=args.admission_retries,
+                      fault_schedule=fault)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -108,7 +112,7 @@ def _paged(model, params, cfg, args):
         print(f"decode-step latency p50={lat[len(lat) // 2] * 1e3:.2f}ms "
               f"p99={lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3:.2f}ms")
     degraded = {k: sum(s.get(k, 0) for s in stats)
-                for k in ("preempted", "timeouts", "rejected")}
+                for k in ("preempted", "timeouts", "rejected", "drained")}
     if any(degraded.values()):
         print("degradation: " + " ".join(f"{k}={v}"
                                          for k, v in degraded.items()))
@@ -138,6 +142,14 @@ def main():
     ap.add_argument("--admission-retries", type=int, default=256,
                     help="failed admission attempts before the queue head "
                          "is rejected")
+    ap.add_argument("--fault-schedule", default=None, metavar="SPEC",
+                    help="scripted fault timeline applied per serve step "
+                         "(repro.comm.faults.FaultSchedule.parse), e.g. "
+                         "'delay@5-20:seconds=0.05,callsite=serve.step'")
+    ap.add_argument("--fail-rank", default=None, metavar="RANK@STEP",
+                    help="shorthand: lose device RANK at serve step STEP — "
+                         "requests with KV pages on it drain and re-prefill "
+                         "on surviving pages")
     ap.add_argument("--legacy", action="store_true",
                     help="whole-batch generate loop instead of the "
                          "continuous-batching engine")

@@ -22,6 +22,14 @@ programs of the serving loop:
 ``step()`` = admit within the prefill-token budget -> prefill those ->
 one decode batch -> sample/advance/recycle. ``run()`` drains the queue and
 returns the full token streams.
+
+Rank-death drain (ARCHITECTURE.md §8): when the fault schedule marks a
+rank lost, every active request holding a KV page resident on it (pages
+stripe round-robin: page ``p`` lives on rank ``p % nranks``) is drained —
+preempted with its tokens intact and re-queued at the head, so
+re-admission re-prefills ``tokens_so_far`` on surviving pages. The same
+zero-loss contract page-pool preemption honors, triggered by rank death
+instead of pool pressure.
 """
 from __future__ import annotations
 
@@ -93,6 +101,8 @@ class ServeEngine:
         self.admission_retries = admission_retries
         self._fault_schedule = fault_schedule
         self._steps = 0
+        self._nranks = int(mesh.shape[axis]) if mesh is not None else 1
+        self._drained_ranks: set = set()
 
         self.alloc = PageAllocator(pcfg)
         self.scheduler = Scheduler(self.alloc,
@@ -180,12 +190,39 @@ class ServeEngine:
         self.alloc.commit(req.slot, S0)
         self._advance(req, self._sample(np.asarray(logits[0, S0 - 1])))
 
+    def _drain_lost_ranks(self) -> int:
+        """Re-queue every active request with a KV page on a newly lost
+        rank (page ``p`` stripes onto rank ``p % nranks``): preempt it
+        with ``tokens_so_far`` intact and put it at the queue head, so
+        re-admission re-prefills onto surviving pages and the greedy
+        stream resumes token-identical. Returns the drain count."""
+        inj = self._fault_schedule.injector
+        new = inj.lost_ranks - self._drained_ranks
+        if not new:
+            return 0
+        self._drained_ranks |= new
+        lost = {r % self._nranks for r in new}
+        victims = []
+        for slot, req in sorted(self.scheduler.active.items()):
+            row = self.alloc.block_table[slot]
+            pages = row[row < self.pcfg.num_pages]
+            if any(int(p) % self._nranks in lost for p in pages):
+                victims.append(req)
+        for req in victims:
+            self.scheduler.preempt_request(req)
+        for req in reversed(victims):
+            self.scheduler.waiting.appendleft(req)
+        return len(victims)
+
     def step(self) -> Dict:
-        """One loop iteration: expire deadlines, admit + prefill within
-        budget (preempting if armed), then one batched decode over every
-        active slot. Returns step stats."""
+        """One loop iteration: expire deadlines, drain requests whose KV
+        pages died with a lost rank, admit + prefill within budget
+        (preempting if armed), then one batched decode over every active
+        slot. Returns step stats."""
+        drained = 0
         if self._fault_schedule is not None:
             self._fault_schedule.apply(self._steps)
+            drained = self._drain_lost_ranks()
         self._steps += 1
         expired = self.scheduler.expire(time.monotonic())
         pre_preempted = self.scheduler.preempted_total
@@ -211,7 +248,8 @@ class ServeEngine:
                     f"never be admitted: pool is idle yet too small")
             return {"prefills": 0, "prefill_tokens": 0, "decode_tokens": 0,
                     "active": 0, "decode_s": 0.0, "preempted": preempted,
-                    "timeouts": len(expired), "rejected": rejected}
+                    "timeouts": len(expired), "rejected": rejected,
+                    "drained": drained}
         t0 = time.perf_counter()
         for req in admitted:
             self._prefill_one(req)
@@ -241,7 +279,7 @@ class ServeEngine:
                 "active": len(self.scheduler.active),
                 "prefill_s": prefill_s, "decode_s": decode_s,
                 "preempted": preempted, "timeouts": len(expired),
-                "rejected": rejected}
+                "rejected": rejected, "drained": drained}
 
     def run(self, requests=None, *, max_new_tokens: int = 16,
             collect_stats: bool = False):

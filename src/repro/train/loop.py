@@ -11,14 +11,23 @@ fault-tolerance tests:
   optimizer update but *before* that step's checkpoint, proving restart
   loses at most ``checkpoint_every`` steps;
 * deterministic data: batches are a pure function of (seed, step), so a
-  resumed run consumes exactly the batches the crashed run would have.
+  resumed run consumes exactly the batches the crashed run would have;
+* elastic rank-loss recovery: when the fault schedule declares a device
+  lost (``FaultInjector.fail_rank``), the loop raises
+  :class:`~repro.comm.faults.RankLostError` and
+  :func:`train_loop_elastic` rebuilds the mesh on the largest survivor
+  count dividing the global batch, restores the latest checkpoint
+  *resharded* onto it (``checkpoint.restore(..., reshard_to=mesh)``),
+  and resumes — losing at most ``checkpoint_every`` steps of progress
+  and zero data (batches are step-indexed).
 """
 from __future__ import annotations
 
 import logging
+import shutil
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +35,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import sharding as sh
+from repro.comm.faults import RankLostError
 from repro.configs.base import ModelConfig, RunConfig
 from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.models.model import Model, build_model
@@ -83,15 +93,24 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
             run_cfg.checkpoint_dir, every=run_cfg.checkpoint_every,
             keep=run_cfg.keep_checkpoints)
         if manager.has_checkpoint:
-            shardings = None
-            if mesh is not None:
-                rules = sh.rules_for(mesh)
-                specs = state_specs(state, rules, mesh, zero1=loop_cfg.zero1)
-                shardings = {"state": jax.tree.map(
-                    lambda s: jax.NamedSharding(mesh, s), specs,
-                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))}
-            start_step, trees, extra = manager.restore_latest(
-                {"state": state}, shardings)
+            if mesh is not None and loop_cfg.step_mode != "gspmd":
+                # explicit whole-model layout: derive the shardings from
+                # whole_model_param_specs on the *current* mesh — the
+                # elastic path when it differs from the saving mesh
+                start_step, trees, extra = manager.restore_latest(
+                    {"state": state}, reshard_to=mesh)
+            else:
+                shardings = None
+                if mesh is not None:
+                    rules = sh.rules_for(mesh)
+                    specs = state_specs(state, rules, mesh,
+                                        zero1=loop_cfg.zero1)
+                    shardings = {"state": jax.tree.map(
+                        lambda s: jax.NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))}
+                start_step, trees, extra = manager.restore_latest(
+                    {"state": state}, shardings)
             state = trees["state"]
             log.info("resumed from checkpoint step %d", start_step)
 
@@ -122,6 +141,14 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
     for step in range(start_step, loop_cfg.steps):
         if schedule is not None:
             schedule.apply(step)
+            lost = schedule.injector.lost_ranks
+            if lost:
+                # the mesh as built no longer exists: surface the loss with
+                # the partial history attached so train_loop_elastic can
+                # rebuild on the survivors and resume from the checkpoint
+                err = RankLostError(lost, step)
+                err.history = history
+                raise err
         batch_np = dataset.batch(step)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         if mesh is not None and not explicit:
@@ -177,3 +204,86 @@ def train_loop(model_cfg: ModelConfig, run_cfg: RunConfig, data_cfg: DataConfig,
     if retuner is not None:
         history["retune_events"] = retuner.events  # type: ignore[assignment]
     return history
+
+
+def largest_divisible(survivors: int, global_batch: int) -> int:
+    """The largest rank count <= ``survivors`` dividing ``global_batch`` —
+    the biggest mesh the fixed batch reshards onto evenly."""
+    if survivors < 1:
+        raise ValueError(f"no survivors ({survivors})")
+    for n in range(survivors, 1, -1):
+        if global_batch % n == 0:
+            return n
+    return 1
+
+
+def train_loop_elastic(model_cfg: ModelConfig, run_cfg: RunConfig,
+                       data_cfg: DataConfig, loop_cfg: TrainLoopConfig, *,
+                       mesh, key=None, snapshot_dir: Optional[str] = None
+                       ) -> Tuple[Dict[str, List[float]], Optional[Dict]]:
+    """:func:`train_loop` that survives a scripted rank loss.
+
+    Runs the loop on ``mesh``; when the fault schedule fires ``fail_rank``
+    and :class:`~repro.comm.faults.RankLostError` surfaces, it
+
+    1. rebuilds the mesh on the **largest survivor count dividing the
+       global batch** (:func:`largest_divisible` — the batch layout, not
+       the hardware, caps elasticity),
+    2. optionally snapshots the checkpoint directory to ``snapshot_dir``
+       *before* resuming (so a control rerun can restore the exact
+       checkpoint the recovery used),
+    3. clears the injector's lost ranks (the one-shot schedule will not
+       re-fire) and re-enters :func:`train_loop` on the survivor mesh —
+       auto-resume restores the latest checkpoint resharded onto it via
+       ``checkpoint.restore(..., reshard_to=mesh)``.
+
+    Returns ``(history, recovery)``: the merged metric history (pre-loss
+    steps + resumed steps) and a recovery record (``None`` when no rank
+    was lost) with the lost ranks, fail/resume steps, survivor mesh size,
+    and recovery wall-clock seconds.
+    """
+    try:
+        return train_loop(model_cfg, run_cfg, data_cfg, loop_cfg,
+                          mesh=mesh, key=key), None
+    except RankLostError as e:
+        t0 = time.perf_counter()
+        if not run_cfg.checkpoint_dir:
+            raise RuntimeError(
+                "elastic recovery needs run_cfg.checkpoint_dir") from e
+        devices = list(np.asarray(mesh.devices).flat)
+        survivors = [d for i, d in enumerate(devices) if i not in e.ranks]
+        if not survivors:
+            raise RuntimeError("every rank lost; nothing to resume on") from e
+        n = largest_divisible(len(survivors), data_cfg.global_batch)
+        from repro.compat import make_mesh
+        new_mesh = make_mesh((n,), tuple(mesh.axis_names),
+                             devices=np.array(survivors[:n]))
+        log.warning("rank(s) %s lost at step %d; resuming on %d survivors",
+                    e.ranks, e.step, n)
+        if snapshot_dir is not None:
+            shutil.copytree(run_cfg.checkpoint_dir, snapshot_dir,
+                            dirs_exist_ok=True)
+        schedule = loop_cfg.fault_schedule
+        if schedule is not None:
+            schedule.injector.restore_ranks()
+        resumed = train_loop(model_cfg, run_cfg, data_cfg, loop_cfg,
+                             mesh=new_mesh, key=key)
+        recovery = {
+            "lost_ranks": list(e.ranks),
+            "fail_step": e.step,
+            "resume_step": int(resumed["step"][0]) if resumed["step"]
+            else e.step,
+            "old_size": len(devices),
+            "new_size": n,
+            "recovery_s": time.perf_counter() - t0,
+        }
+        partial = getattr(e, "history", None) or {}
+        merged: Dict[str, List[float]] = dict(resumed)
+        for k in ("loss", "step_time", "step"):
+            pre = list(partial.get(k, ()))
+            keep = [v for s, v in zip(partial.get("step", ()), pre)
+                    if s < recovery["resume_step"]] if k != "step" else \
+                   [s for s in partial.get("step", ())
+                    if s < recovery["resume_step"]]
+            merged[k] = keep + list(resumed.get(k, ()))
+        return merged, recovery

@@ -8,8 +8,19 @@ import os
 import pytest
 
 
+DIST_TEST_TIMEOUT_S = 300
+
+
 def pytest_collection_modifyitems(config, items):
     if os.environ.get("REPRO_DIST_TESTS") == "1":
+        # per-test wall-clock cap (pytest-timeout, when installed): a
+        # route-exclusion regression that deadlocks a collective must fail
+        # the suite, not hang it. Guarded so a container without the
+        # plugin still runs the tests.
+        if config.pluginmanager.hasplugin("timeout"):
+            timeout = pytest.mark.timeout(DIST_TEST_TIMEOUT_S)
+            for item in items:
+                item.add_marker(timeout)
         return
     skip = pytest.mark.skip(
         reason="distributed suite runs via tests/test_dist_wrapper.py "

@@ -1,4 +1,5 @@
-"""Degraded-link resilience end-to-end on the 8-device mesh (ISSUE 8).
+"""Degraded- and dead-link resilience end-to-end on the 8-device mesh
+(ISSUES 8 + 9).
 
 Acceptance:
 * degrade a link mid-run -> the RetuneController detects the drift ->
@@ -6,7 +7,13 @@ Acceptance:
   resolved schedule **on the same engine object** (no rebuild) -> the
   bcast keeps returning bit-identical results through both flips;
 * an ``InjectedFailure`` crash under ``step_mode="explicit_tp"`` resumes
-  from the last checkpoint and lands on the uninterrupted run's loss.
+  from the last checkpoint and lands on the uninterrupted run's loss;
+* sever a ring hop -> the health mask reroutes bcast and allreduce onto
+  the rooted chain, bit-identical to the healthy ring, for every break
+  position;
+* lose a rank mid-run -> ``train_loop_elastic`` resumes on the largest
+  divisible survivor mesh from the resharded checkpoint, bitwise equal
+  to a control run restored from the same snapshot.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.comm.autotune import CostModel, _seg_time, segments
+from repro.comm.autotune import CostModel, _seg_time, route_links, segments
 from repro.comm.callsites import HPL_PANEL
 from repro.comm.engine import CollectiveEngine, schedules_for
 from repro.comm.faults import FaultInjector, FaultSchedule
@@ -131,3 +138,78 @@ def test_injected_failure_resume_explicit_tp(ring, tmp_path):
     assert clean["step"] == list(range(5))
     np.testing.assert_allclose(resumed["loss"][-1], clean["loss"][-1],
                                rtol=1e-6)
+
+
+@pytest.mark.parametrize("hop", [0, 3, NDEV - 1])
+def test_rerouted_ring_bit_identical_to_healthy(ring, hop):
+    """With hop severed, both collectives re-resolve onto the rooted chain
+    and return exactly the healthy ring's bytes — for breaks at the
+    wraparound, mid-ring, and the default cut position."""
+    eng = CollectiveEngine.for_mesh(
+        ring, cost_model=CostModel(hw=TPU_V5E, table=None))
+    inj = FaultInjector(hw=TPU_V5E)
+    x = np.arange(NDEV * (NBYTES // 4), dtype=np.int32).reshape(NDEV, -1)
+
+    def run():
+        fn = jax.jit(shard_map(
+            lambda v: (eng.bcast(v[0], "x", 2)[None],
+                       eng.allreduce(v, "x")),
+            mesh=ring, in_specs=(P("x", None),),
+            out_specs=(P("x", None), P("x", None)), check_vma=False))
+        b, a = fn(jnp.asarray(x))
+        return np.asarray(b), np.asarray(a)
+
+    healthy = run()
+    inj.down_link("x", hop)
+    eng.invalidate_resolutions(health=inj.down_links())
+    for op in ("bcast", "allreduce"):
+        resolved = eng.schedule_for(op, nbytes=NBYTES, axis="x")
+        assert resolved == "chain_rooted", (op, hop, resolved)
+        route = route_links(op, resolved, eng.topology.axes,
+                            health=inj.down_links())
+        assert route is not None and ("x", hop) not in route
+    rerouted = run()
+    np.testing.assert_array_equal(rerouted[0], healthy[0],
+                                  err_msg=f"bcast hop={hop}")
+    np.testing.assert_array_equal(rerouted[1], healthy[1],
+                                  err_msg=f"allreduce hop={hop}")
+    np.testing.assert_array_equal(healthy[0], np.broadcast_to(x[2], x.shape))
+    np.testing.assert_array_equal(healthy[1],
+                                  np.broadcast_to(x.sum(axis=0), x.shape))
+
+
+def test_rank_loss_elastic_resume_bitwise(ring, tmp_path):
+    """Rank 7 dies at step 3: the loop resumes on the 4-survivor mesh from
+    the resharded checkpoint, bitwise equal to a control restored from the
+    identical snapshot on the identical mesh."""
+    from repro.train.loop import train_loop_elastic
+
+    cfg = tiny(NDEV, layers=2)
+    data = DataConfig(cfg.vocab_size, NDEV, 16)
+
+    def _lcfg(**kw):
+        return TrainLoopConfig(steps=5, step_mode="explicit_tp", **kw)
+
+    def _rcfg(ckdir):
+        return RunConfig(checkpoint_dir=str(ckdir), checkpoint_every=2,
+                         learning_rate=1e-3, warmup_steps=1)
+
+    inj = FaultInjector(hw=TPU_V5E)
+    fault = FaultSchedule.rank_loss(inj, 3, rank=NDEV - 1)
+    hist, rec = train_loop_elastic(
+        cfg, _rcfg(tmp_path / "ck"), data, _lcfg(fault_schedule=fault),
+        mesh=ring, snapshot_dir=str(tmp_path / "snap"))
+
+    assert rec is not None
+    assert rec["lost_ranks"] == [NDEV - 1] and rec["fail_step"] == 3
+    assert rec["new_size"] == 4 and rec["old_size"] == NDEV
+    assert rec["resume_step"] <= rec["fail_step"]
+    assert hist["step"][-1] == 4  # the resumed run finished all 5 steps
+
+    devices = list(np.asarray(ring.devices).flat)
+    ctrl_mesh = make_mesh((4,), ("x",),
+                          devices=np.array(devices[:4]))
+    ctrl = train_loop(cfg, _rcfg(tmp_path / "snap"), data, _lcfg(),
+                      mesh=ctrl_mesh)
+    i = hist["step"].index(rec["resume_step"])
+    assert hist["loss"][i:] == ctrl["loss"]  # bitwise, not approx

@@ -158,6 +158,49 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ckpt.restore(d, {"state": bad})
 
 
+def test_checkpoint_mismatch_reports_every_leaf(tmp_path):
+    """A structure mismatch raises CheckpointMismatchError carrying the
+    complete diagnosis — every missing and shape-mismatched leaf across
+    all trees, not a bare KeyError on the first absent array."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"state": _tree()})
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((2, 2))       # wrong shape
+    bad["params"]["extra"] = jnp.zeros(3)        # not in the checkpoint
+    with pytest.raises(ckpt.CheckpointMismatchError) as ei:
+        ckpt.restore(d, {"state": bad})
+    err = ei.value
+    assert err.missing == ("state:params/extra",)
+    assert err.shape_mismatches == (("state:params/w", (4, 4), (2, 2)),)
+    for frag in ("missing from checkpoint", "state:params/extra",
+                 "state:params/w", "(4, 4)", "(2, 2)"):
+        assert frag in str(err), frag
+
+
+def test_checkpoint_subset_restore_still_allowed(tmp_path):
+    """Unexpected-on-disk leaves alone are informational: restoring a
+    subset of the saved structure must keep working."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"state": _tree()})
+    subset = {"params": {"w": jnp.zeros((4, 4))}}
+    step, out, _ = ckpt.restore(d, {"state": subset})
+    assert step == 1
+    assert set(out["state"]["params"]) == {"w"}
+
+
+def test_checkpoint_restore_reshard_to_mesh(tmp_path):
+    """reshard_to derives replicated NamedShardings for a plain tree —
+    the rank-loss recovery path in miniature."""
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(d, 1, {"state": tree})
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+    step, out, _ = ckpt.restore(d, {"state": tree}, reshard_to=mesh)
+    assert step == 1
+    assert out["state"]["params"]["w"].sharding.is_equivalent_to(
+        jax.NamedSharding(mesh, jax.sharding.PartitionSpec()), 2)
+
+
 def test_checkpoint_elastic_resharding(tmp_path):
     """Restore under a different sharding (1-device mesh here; the 8-device
     cross-mesh restore runs in the distributed suite)."""

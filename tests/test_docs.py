@@ -162,6 +162,17 @@ def test_readme_resilience_quickstart_executes():
     exec(compile(m.group(1), "README.md#resilience", "exec"), {})
 
 
+def test_readme_failover_quickstart_executes():
+    """The README's dead-link quickstart is executable as written —
+    including its asserts, so the documented chain -> chain_rooted ->
+    chain reroute and the route-exclusion proof are re-proven against the
+    live cost model on every run."""
+    sec = _section(README, r"## Failover")
+    m = re.search(r"```python\n(.*?)```", sec, re.DOTALL)
+    assert m, "README Failover section lost its python quickstart"
+    exec(compile(m.group(1), "README.md#failover", "exec"), {})
+
+
 # ---------------------------------------------------------------------------
 # markdown links
 # ---------------------------------------------------------------------------

@@ -5,11 +5,12 @@ from __future__ import annotations
 
 import pytest
 
-from repro.comm.autotune import CostModel, TuningTable
+from repro.comm.autotune import CostModel, TuningTable, route_links
 from repro.comm.engine import CollectiveEngine
 from repro.comm.faults import (FAULT_ACTIONS, FaultEvent, FaultInjector,
-                               FaultSchedule, LinkFault, active_injector,
-                               injected, measured_extra_time)
+                               FaultSchedule, LinkFault, RankLostError,
+                               active_injector, injected,
+                               measured_extra_time)
 from repro.comm.retune import RETUNE_TRIGGERS, RetuneController, Watched
 from repro.comm.topology import AxisTopology, MeshTopology
 from repro.comm.types import TPU_V5E
@@ -131,6 +132,130 @@ def test_schedule_applies_at_exact_steps():
     assert inj.active and inj.scales(("x",)) == (1.0, 16.0)
     sched.apply(6)
     assert not inj.active and inj.host_delay("c") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Hard faults: down links, link-health masks, rank loss
+# ---------------------------------------------------------------------------
+
+
+def test_down_link_mask_and_heal():
+    inj = FaultInjector(hw=TPU_V5E)
+    assert inj.down_links() == frozenset()
+    inj.down_link("x", 3)
+    inj.degrade_link("y", 0, beta_scale=4.0)  # soft fault: not in the mask
+    assert inj.active
+    assert inj.down_links() == frozenset({("x", 3)})
+    assert inj.down_links((RING8[0],)) == frozenset({("x", 3)})
+    assert inj.down_links(("y",)) == frozenset()
+    # a down link contributes no soft scaling — it is gone, not slow
+    assert inj.scales(("x",)) == (1.0, 1.0)
+    inj.heal("x", 3)
+    assert inj.down_links() == frozenset()
+
+
+def test_down_link_extra_time_is_infinite_on_crossing_routes():
+    inj = FaultInjector(hw=TPU_V5E)
+    inj.down_link("x", 3)
+    # chain crosses every ring hop -> unusable
+    assert inj.extra_time("bcast", "chain", NBYTES, RING8) == float("inf")
+    # staged rides PCIe+MPI -> unaffected
+    assert inj.extra_time("bcast", "staged", NBYTES, RING8) == 0.0
+    # chain_rooted cuts at the down hop -> usable
+    assert inj.extra_time("bcast", "chain_rooted", NBYTES,
+                          RING8) != float("inf")
+
+
+def test_health_mask_reroutes_resolution_on_same_engine():
+    inj = FaultInjector(hw=TPU_V5E)
+    engine = _engine()
+    before = engine.schedule_for("bcast", nbytes=NBYTES, axis="x")
+    inj.down_link("x", 3)
+    engine.invalidate_resolutions(health=inj.down_links())
+    during = engine.schedule_for("bcast", nbytes=NBYTES, axis="x")
+    route = route_links("bcast", during, RING8,
+                        health=frozenset({("x", 3)}))
+    inj.heal()
+    engine.invalidate_resolutions(health=inj.down_links())
+    after = engine.schedule_for("bcast", nbytes=NBYTES, axis="x")
+    assert before == "chain" and during == "chain_rooted" and after == before
+    assert route is not None and ("x", 3) not in route
+
+
+def test_health_mask_rejects_stale_measured_winner():
+    """A tuning-table winner that crosses the cut must not survive the
+    health mask — the analytic fallback reroutes instead."""
+    t = TuningTable(hw="test")
+    t.set("bcast", "ring[8]", [(None, "chain")])
+    model = CostModel(hw=TPU_V5E, table=t, health=frozenset({("x", 2)}))
+    assert model.choose("bcast", NBYTES, RING8) == "chain_rooted"
+
+
+def test_doubly_broken_ring_falls_back_to_staged():
+    """Two cuts: no rooted chain survives, so the host-staged route wins."""
+    health = frozenset({("x", 1), ("x", 5)})
+    model = CostModel(hw=TPU_V5E, table=None, health=health)
+    winner = model.choose("bcast", NBYTES, RING8)
+    route = route_links("bcast", winner, RING8, health=health)
+    assert winner == "staged"
+    assert route == frozenset()
+
+
+def test_rank_loss_lifecycle():
+    inj = FaultInjector(hw=TPU_V5E)
+    assert inj.lost_ranks == frozenset()
+    inj.fail_rank(3)
+    inj.fail_rank(5)
+    assert inj.active
+    assert inj.lost_ranks == frozenset({3, 5})
+    inj.restore_ranks()
+    assert inj.lost_ranks == frozenset() and not inj.active
+    err = RankLostError({5, 3}, 12)
+    assert err.ranks == (3, 5) and err.step == 12
+    assert isinstance(err, RuntimeError)
+
+
+def test_fault_schedule_fail_rank_is_one_shot():
+    """A resumed loop re-entering the step range must not re-lose the rank
+    it just recovered from."""
+    inj = FaultInjector(hw=TPU_V5E)
+    sched = FaultSchedule.rank_loss(inj, 4, rank=7)
+    sched.apply(4)
+    assert inj.lost_ranks == frozenset({7})
+    inj.restore_ranks()   # what train_loop_elastic does before resuming
+    sched.apply(4)        # the resumed loop passes step 4 again
+    assert inj.lost_ranks == frozenset()
+
+
+def test_down_window_round_trip():
+    inj = FaultInjector(hw=TPU_V5E)
+    sched = FaultSchedule.down_window(inj, 3, 6, axis="x", hop=2)
+    for step in range(8):
+        sched.apply(step)
+        if 3 <= step < 6:
+            assert inj.down_links() == frozenset({("x", 2)})
+        else:
+            assert inj.down_links() == frozenset()
+
+
+def test_fault_schedule_parse():
+    inj = FaultInjector(hw=TPU_V5E)
+    sched = FaultSchedule.parse(
+        inj, "degrade@5-20:axis=x,hop=1,beta_scale=64;"
+             "down@8-12:axis=x,hop=3;"
+             "delay@5-9:seconds=0.05,callsite=train.step;"
+             "fail_rank@12:rank=3")
+    actions = sorted(e.action for e in sched.events)
+    assert actions == ["clear_delay", "degrade", "delay", "down",
+                       "fail_rank", "heal", "heal"]
+    sched.apply(8)
+    assert inj.down_links() == frozenset({("x", 3)})
+    sched.apply(12)
+    assert inj.down_links() == frozenset() and inj.lost_ranks == {3}
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(inj, "explode@3")
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(inj, "fail_rank@3-5:rank=1")  # no window form
 
 
 # ---------------------------------------------------------------------------

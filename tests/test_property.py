@@ -12,7 +12,10 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import compression
+from repro.comm.autotune import CostModel, route_links
 from repro.comm.engine import CollectiveEngine, schedules_for
+from repro.comm.topology import AxisTopology
+from repro.comm.types import TPU_V5E
 from repro.compat import make_mesh, shard_map
 from repro.core import models
 from repro.core.ptrans import distribute_cyclic, undistribute_cyclic
@@ -268,6 +271,66 @@ def test_pipelined_a2a_matches_monolithic_randomized(nchunks, rows, dtype,
 
 # (pipelined-a2a argument validation lives in
 # tests/test_engine.py::test_pipelined_rejects_unsupported_ops)
+
+
+# --- link-health masks: no resolution crosses a down link --------------------
+#
+# For every (op, topology kind, break position): with one link marked
+# hard-down, the cost model's winner must have a *known* route whose link
+# set excludes the cut and a finite cost — i.e. schedule resolution
+# provably never routes through a dead wire, whichever hop died.
+
+
+def _break_cases():
+    cases = []
+    for n in (4, 8):
+        cases.append(("ring", (AxisTopology("x", n, "ring"),)))
+        cases.append(("torus", (AxisTopology("rows", n, "ring"),
+                                AxisTopology("cols", n, "ring"))))
+    return cases
+
+
+_BREAK_CASES = _break_cases()
+
+
+@SETTINGS
+@given(case=st.sampled_from(range(len(_BREAK_CASES))),
+       op=st.sampled_from(["bcast", "allreduce"]),
+       hop_seed=st.integers(0, 63),
+       nbytes=st.sampled_from([256, 16384, 1 << 20]))
+def test_no_resolution_crosses_a_down_link(case, op, hop_seed, nbytes):
+    import math
+    kind, axes = _BREAK_CASES[case]
+    ax = axes[hop_seed % len(axes)]          # which axis breaks
+    hop = (hop_seed // len(axes)) % ax.size  # where on it
+    health = frozenset({(ax.name, hop)})
+    model = CostModel(hw=TPU_V5E, table=None, health=health)
+    winner = model.choose(op, nbytes, axes)
+    assert winner in schedules_for(op), (kind, winner)
+    route = route_links(op, winner, axes, health=health)
+    assert route is not None, \
+        f"{kind}: winner {winner!r} has no priceable route"
+    assert not (route & health), \
+        f"{kind}: {op}/{winner} routes through down link {(ax.name, hop)}"
+    assert math.isfinite(model.cost(op, winner, nbytes, axes)), \
+        f"{kind}: winner {winner!r} priced infinite yet chosen"
+
+
+@SETTINGS
+@given(hop=st.integers(0, 7), nbytes=st.sampled_from([256, 16384]))
+def test_down_link_never_prices_crossing_schedule_finite(hop, nbytes):
+    """The converse: any schedule whose route intersects the cut (or is
+    unknown under a health mask) must be priced infinite."""
+    import math
+    axes = (AxisTopology("x", 8, "ring"),)
+    health = frozenset({("x", hop)})
+    model = CostModel(hw=TPU_V5E, table=None, health=health)
+    for op in ("bcast", "allreduce"):
+        for name in schedules_for(op):
+            route = route_links(op, name, axes, health=health)
+            cost = model.cost(op, name, nbytes, axes)
+            if route is None or route & health:
+                assert not math.isfinite(cost), (op, name, hop)
 
 
 # --- HLO shape parser --------------------------------------------------------
