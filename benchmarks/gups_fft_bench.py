@@ -1,0 +1,105 @@
+"""Distributed GUPS + FFT — the legacy suite's two kernels, engine-routed.
+
+The HPCC adaptation (arXiv:2004.11059) frames RandomAccess and FFT as the
+latency- and all-to-all-bandwidth corners of the suite; this module runs
+both corners through the :class:`~repro.comm.engine.CollectiveEngine`
+(callsite tags ``ra.updates`` / ``fft.transpose``) next to their
+zero-communication legacy references from ``legacy_suite``:
+
+* RandomAccess: drop-local reference vs the routed path that forwards
+  every update to its owning rank over ``all_to_all_tiles`` — validated by
+  exact inverse-sequence restore (``err`` must be exactly 0.0);
+* FFT: per-device batched reference vs the pencil-decomposed transform
+  whose two global transposes ride the engine — the distributed output is
+  bitwise ``jnp.fft.fft`` at the per-rank block shape (the exchanges
+  localize full signals before transforming), so ``err`` vs ``np.fft.fft``
+  matches the local path's.
+
+Like lm/serve, the module itself exits 1 if either routed section's
+resolved schedule is the literal ``"auto"`` or an unregistered name, or if
+the correctness gates fail — the same gate as ``--autotune``; CI re-asserts
+from the saved record.
+"""
+from __future__ import annotations
+
+from benchmarks.common import ensure_devices, save_result, table
+
+ensure_devices()
+
+from repro.comm.engine import schedules_for  # noqa: E402
+from repro.core.fft import run_fft, run_fft_dist  # noqa: E402
+from repro.core.randomaccess import (  # noqa: E402
+    run_randomaccess, run_randomaccess_dist)
+from repro.launch.mesh import make_ring_mesh  # noqa: E402
+
+
+def main(quick: bool = False, schedule=None):
+    mesh = make_ring_mesh()
+    n = mesh.devices.size
+    sched = schedule or "auto"
+
+    print(f"== distributed GUPS + FFT over {n} devices "
+          f"(schedule={sched}) ==")
+    record = {"schedule_requested": sched}
+    rows = []
+
+    ra_kw = dict(table_log=16 if quick else 20,
+                 updates_per_rng=1024 if quick else 4096)
+    res = run_randomaccess(mesh, **ra_kw)
+    rows.append(["RandomAccess local", "GUPS", f"{res.metric:.4f}",
+                 "drop-local", f"{res.error:.2e}"])
+    record["randomaccess_local"] = {"gups": res.metric, "err": res.error}
+
+    res = run_randomaccess_dist(mesh, schedule=sched, **ra_kw)
+    rows.append(["RandomAccess routed", "GUPS", f"{res.metric:.4f}",
+                 res.details["schedule"], f"{res.error:.2e}"])
+    record["randomaccess_routed"] = {
+        "gups": res.metric, "err": res.error,
+        "schedule": res.details["schedule"],
+        "nchunks": res.details["nchunks"],
+        "exchange_bytes": res.details["exchange_bytes"]}
+
+    fft_kw = dict(log_size=10 if quick else 14,
+                  batch_per_device=16 if quick else 64)
+    res = run_fft(mesh, **fft_kw)
+    rows.append(["FFT local", "GFLOP/s", f"{res.metric:.2f}",
+                 "per-device", f"{res.error:.2e}"])
+    record["fft_local"] = {"gflops": res.metric, "err": res.error}
+
+    res = run_fft_dist(mesh, schedule=sched, **fft_kw)
+    rows.append(["FFT pencil", "GFLOP/s", f"{res.metric:.2f}",
+                 res.details["schedule"], f"{res.error:.2e}"])
+    record["fft_dist"] = {
+        "gflops": res.metric, "err": res.error,
+        "schedule": res.details["schedule"],
+        "nchunks": res.details["nchunks"],
+        "exchange_bytes": res.details["exchange_bytes"]}
+
+    print(table(rows, ["benchmark", "metric", "aggregate", "schedule",
+                       "error"]))
+    save_result("gups_fft_bench", record)
+
+    # the --autotune gate, in-module: resolved schedules must be registered
+    # names (never the literal "auto") and the correctness invariants must
+    # hold — routed GUPS restores exactly, pencil FFT matches the reference
+    a2a = schedules_for("all_to_all_tiles")
+    bad = []
+    for sec in ("randomaccess_routed", "fft_dist"):
+        name = record[sec]["schedule"]
+        if name == "auto" or name not in a2a:
+            bad.append(f"{sec}: unregistered schedule {name!r}")
+    if record["randomaccess_routed"]["err"] != 0.0:
+        bad.append("randomaccess_routed: inverse restore not exact "
+                   f"(err={record['randomaccess_routed']['err']})")
+    if not record["fft_dist"]["err"] < 1e-5:
+        bad.append(f"fft_dist: err={record['fft_dist']['err']} vs np.fft")
+    if bad:
+        print("GATE FAILURES:", bad)
+        raise SystemExit(1)
+    print("[gups_fft ok: resolved schedules registered, restore exact, "
+          "fft matches reference]")
+    return record
+
+
+if __name__ == "__main__":
+    main()

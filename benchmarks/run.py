@@ -25,7 +25,8 @@ resolution names an unregistered schedule. Combine with modules to run
 benchmarks against the freshly measured table in the same invocation.
 
 Module arguments accept short aliases: ``hpl`` -> hpl_scaling, ``ptrans`` ->
-ptrans_scaling, ``beff`` -> beff_bandwidth, ``overlap`` -> overlap_bench.
+ptrans_scaling, ``beff`` -> beff_bandwidth, ``overlap`` -> overlap_bench,
+``gups`` / ``fftd`` -> gups_fft_bench.
 
 One module per paper table/figure (DESIGN.md §6):
   beff_bandwidth   Fig. 10/11 + Eqs. 1/2/4
@@ -33,6 +34,11 @@ One module per paper table/figure (DESIGN.md §6):
   hpl_matrix_sweep Fig. 13
   hpl_scaling      Figs. 14/15
   legacy_suite     Fig. 16
+  gups_fft_bench   beyond-paper distributed GUPS + pencil FFT: the legacy
+                   suite's two kernels engine-routed (ra.updates /
+                   fft.transpose callsites) next to their zero-comm
+                   references (records the resolved schedules and exits 1
+                   if any is unregistered — the --autotune gate)
   resource_table   Table 7 analogue (production-mesh compiled footprints)
   lm_step_bench    beyond-paper LM roofline table + explicit-vs-GSPMD MoE
                    (engine-routed expert exchanges; records the resolved
@@ -69,6 +75,7 @@ MODULES = [
     "hpl_matrix_sweep",
     "hpl_scaling",
     "legacy_suite",
+    "gups_fft_bench",
     "resource_table",
     "lm_step_bench",
     "overlap_bench",
@@ -82,6 +89,8 @@ ALIASES = {
     "ptrans": "ptrans_scaling",
     "beff": "beff_bandwidth",
     "overlap": "overlap_bench",
+    "gups": "gups_fft_bench",
+    "fftd": "gups_fft_bench",
     "lm": "lm_step_bench",
     "serve": "serve_bench",
     "resilience": "resilience_bench",
@@ -96,6 +105,10 @@ SWEEP_OPS = {
     "hpl_matrix_sweep": "bcast",
     "hpl_scaling": "bcast",
     "legacy_suite": None,      # embarrassingly parallel — ignores schedule
+    # routed GUPS + pencil FFT both exchange over all_to_all_tiles (the
+    # ra.updates / fft.transpose callsites): the sweep reruns both per
+    # registered schedule next to their zero-comm references
+    "gups_fft_bench": "all_to_all_tiles",
     "resource_table": None,
     # the GSPMD steps ignore schedule (XLA picks the collectives), but the
     # explicit-MoE section routes its dispatch/combine exchanges through the

@@ -279,30 +279,51 @@ def segments(op: str, schedule: str, nbytes: float,
     return fn(float(nbytes), tuple(axes), hw)
 
 
+def canonical_health(health: frozenset,
+                     axes: Sequence[AxisTopology]) -> frozenset:
+    """``health`` with every hop id mapped to its axis's canonical link id
+    (:meth:`AxisTopology.canonical_hop`): on a size-2 ring hops 0 and 1
+    name the same physical wire, so ``down_link(axis, 1)`` must exclude
+    routes recorded as traversing hop 0 and vice versa. Entries naming
+    axes outside ``axes`` pass through unchanged."""
+    by_name = {a.name: a for a in axes}
+    return frozenset(
+        (nm, by_name[nm].canonical_hop(h)) if nm in by_name else (nm, h)
+        for (nm, h) in health)
+
+
 def route_links(op: str, schedule: str, axes: Sequence[AxisTopology], *,
                 health: frozenset = frozenset()) -> Optional[frozenset]:
     """The set of ``(axis, hop)`` physical links one schedule run may
     traverse, or ``None`` for schedules the model has no formula for
     (nothing provable about their route).
 
+    Links are canonical ids (:meth:`AxisTopology.links` — a size-2 ring
+    has ONE wire, id 0, whichever hop name a fault used); ``health`` is
+    canonicalized the same way before use.
+
     ``staged`` — and any run over a staging axis — touches no ICI link:
     its bytes ride PCIe + host MPI, the paper's escape-hatch network.
     ``chain_rooted`` cuts the ring at the down hop named in ``health``
     (the wraparound hop ``size-1`` when clean) and provably never crosses
     it; additional down hops on the same axis stay in its route, so a
-    doubly-broken ring still prices as infinite. Every other priced ICI
-    schedule is conservative: it may ride any link of its axes (XLA
-    routes ``native``/``direct`` itself, and the ring pipelines touch
-    every wire of the ring).
+    doubly-broken ring still prices as infinite. On a size-2 axis the
+    rooted chain has nothing to cut away — every exchange rides the
+    single wire — so that wire stays in its route and a down size-2 axis
+    falls through to ``staged``. Every other priced ICI schedule is
+    conservative: it may ride any link of its axes (XLA routes
+    ``native``/``direct`` itself, and the ring pipelines touch every wire
+    of the ring).
     """
     if (op, schedule) not in _SEGS:
         return None
     if schedule == "staged" or any(a.kind == "staging" for a in axes):
         return frozenset()
+    health = canonical_health(health, axes)
     links = set()
     for a in axes:
         axis_links = set(a.links())
-        if schedule == "chain_rooted":
+        if schedule == "chain_rooted" and a.n_links > 1:
             down = sorted(h for (nm, h) in health if nm == a.name)
             cut = down[0] if down else a.size - 1
             axis_links.discard((a.name, cut))
@@ -529,8 +550,9 @@ class CostModel:
         (e.g. user-registered ones with no formula — never chosen by auto)
         and for any schedule whose route crosses a link in ``health``."""
         if self.health:
-            links = route_links(op, schedule, axes, health=self.health)
-            if links is None or links & self.health:
+            health = canonical_health(self.health, axes)
+            links = route_links(op, schedule, axes, health=health)
+            if links is None or links & health:
                 return float("inf")
         segs = segments(op, schedule, nbytes, axes, self.hw)
         if segs is None:
@@ -838,6 +860,53 @@ def _measure_op_clean(mesh, op: str, nbytes: int, schedule: str,
         _, t = timeit(fn, x, pool, reps=reps, warmup=1)
         return t
 
+    if op == "all_to_all_tiles@ra.updates":
+        # GUPS update routing on the ring: the bucketed (n_dev, L, 2) int32
+        # (local_index, value) exchange followed by the receiving
+        # scatter-add — the latency-corner pattern (small irregular int
+        # payloads, a serialized scatter on landing) an isolated float
+        # all-to-all misses.
+        L = max(elems // (2 * nranks), 1)  # nranks*L*2 int32 = nbytes
+        tbl = jnp.asarray(np.zeros((nranks, 4096), np.int32))
+        buf = jnp.asarray(np.ones((nranks, nranks, L, 2), np.int32))
+        spec_t = P(names[0], None)
+        spec_b = P(names[0], None, None, None)
+
+        def body(t, b):
+            recv = engine.all_to_all_tiles(b[0], names[0], split_axis=0,
+                                           concat_axis=0)
+            out = t[0].at[recv[..., 0].reshape(-1)].add(
+                recv[..., 1].reshape(-1), mode="drop")
+            return out[None]
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec_t, spec_b),
+                               out_specs=spec_t, check_vma=False))
+        _, t = timeit(fn, tbl, buf, reps=reps, warmup=1)
+        return t
+
+    if op == "all_to_all_tiles@fft.transpose":
+        # pencil-FFT global transpose on the ring: the signal-gathering
+        # exchange, the local full-signal FFT, and the inverse scatter
+        # back-to-back — paired exchanges with the transform between them
+        # (direction-symmetric, so one tag covers both directions).
+        ns = max(elems // (2 * nranks), 1)  # complex64: 8 B per element
+        x = jnp.asarray(np.ones((nranks, nranks, 1, ns), np.complex64))
+        spec = P(names[0], None, None, None)
+
+        def body(v):
+            b = v[0]  # (B=nranks, 1, ns) local pencils
+            g = engine.all_to_all_tiles(b, names[0], split_axis=0,
+                                        concat_axis=1)
+            s = jnp.fft.fft(g.reshape(g.shape[0], -1), axis=-1)
+            s = s.reshape(g.shape)
+            return engine.all_to_all_tiles(s, names[0], split_axis=1,
+                                           concat_axis=0)[None]
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                               out_specs=spec, check_vma=False))
+        _, t = timeit(fn, x, reps=reps, warmup=1)
+        return t
+
     if op == "grid_transpose":
         pg = mesh.shape[names[0]]
         side = max(int(math.sqrt(elems)), 1)
@@ -899,7 +968,9 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
                                            "all_to_all_tiles@moe.dispatch",
                                            "all_to_all_tiles@tp.qkv",
                                            "all_to_all_tiles@sp.qkv",
-                                           "all_to_all_tiles@decode.qkv"),
+                                           "all_to_all_tiles@decode.qkv",
+                                           "all_to_all_tiles@ra.updates",
+                                           "all_to_all_tiles@fft.transpose"),
                   sizes: Optional[Sequence[int]] = None, reps: int = 3,
                   quick: bool = False, verbose: bool = True
                   ) -> Tuple[TuningTable, Dict]:
@@ -927,8 +998,13 @@ def autotune_mesh(*, ops: Sequence[str] = ("bcast", "allreduce",
     dispatch/combine) at decode-sized payloads — its own size ladder
     (:data:`DECODE_SIZES`), since per-token messages sit far below the
     training sizes; the winner lands under ``@decode.out`` and
-    ``@decode.moe`` too. Returns ``(table, record)`` where ``record`` holds
-    the raw per-(op, schedule, size) timings for the bench artifact."""
+    ``@decode.moe`` too. ``"all_to_all_tiles@ra.updates"`` times the GUPS
+    bucketed int32 update exchange plus the receiving scatter-add, and
+    ``"all_to_all_tiles@fft.transpose"`` the pencil-FFT gather / local
+    transform / inverse-scatter sandwich (both on the ring; each tag keys
+    its own entry — no alias). Returns ``(table, record)`` where ``record``
+    holds the raw per-(op, schedule, size) timings for the bench
+    artifact."""
     import jax
 
     from repro.comm.engine import schedules_for

@@ -45,6 +45,8 @@ SP_OUT = "sp.out"                # ring attention: inverse exchange
 DECODE_QKV = "decode.qkv"        # per-token decode: q/k/v head split
 DECODE_OUT = "decode.out"        # per-token decode: inverse head exchange
 DECODE_MOE = "decode.moe"        # per-token decode: MoE dispatch+combine
+RA_UPDATES = "ra.updates"        # GUPS: route updates to owning ranks
+FFT_TRANSPOSE = "fft.transpose"  # pencil FFT: signal gather/scatter a2a
 
 
 @dataclass(frozen=True)
@@ -96,4 +98,10 @@ CALLSITES: Dict[str, Callsite] = {
     DECODE_MOE: Callsite("all_to_all_tiles", "repro.train.serve",
                          "DECODE_MOE",
                          tuned="all_to_all_tiles@decode.qkv"),
+    RA_UPDATES: Callsite("all_to_all_tiles", "repro.core.randomaccess",
+                         "RA_UPDATES",
+                         tuned="all_to_all_tiles@ra.updates"),
+    FFT_TRANSPOSE: Callsite("all_to_all_tiles", "repro.core.fft",
+                            "FFT_TRANSPOSE",
+                            tuned="all_to_all_tiles@fft.transpose"),
 }

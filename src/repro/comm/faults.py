@@ -238,10 +238,14 @@ class FaultInjector:
         model has no formula for the schedule. Infinite when the run's
         route traverses a hard-down link — a circuit that cannot be
         established never completes."""
-        from repro.comm.autotune import _seg_time, route_links, segments
+        from repro.comm.autotune import (_seg_time, canonical_health,
+                                         route_links, segments)
         hw = hw or self.hw
         down = self.down_links(axes)
         if down:
+            # route_links reports canonical link ids (size-2 hop aliasing),
+            # so the mask must be canonicalized before intersecting
+            down = canonical_health(down, axes)
             links = route_links(op, schedule, axes, health=down)
             if links is None or links & down:
                 return float("inf")

@@ -46,10 +46,28 @@ class AxisTopology:
         """Every physical link of this axis as ``(name, hop)`` ids — hop
         ``h`` is the bidirectional wire between ranks ``h`` and
         ``h+1 mod size``. A staging axis has no ICI links (its bytes ride
-        PCIe + host MPI), so it reports none."""
+        PCIe + host MPI), so it reports none. On a size-2 ring hops 0 and
+        1 are the *same* physical wire between ranks 0 and 1 (the
+        "wraparound" is the forward link traversed backward), so only the
+        canonical hop 0 is reported — a route or health mask naming
+        either hop refers to that one wire (:meth:`canonical_hop`)."""
         if self.kind == "staging":
             return ()
-        return tuple((self.name, h) for h in range(self.size))
+        return tuple((self.name, h) for h in range(self.n_links))
+
+    @property
+    def n_links(self) -> int:
+        """Distinct physical wires on this axis (0 for staging domains)."""
+        if self.kind == "staging":
+            return 0
+        return 1 if self.size == 2 else self.size
+
+    def canonical_hop(self, hop: int) -> int:
+        """The canonical link id for ``hop`` — on a size-2 axis both hop
+        names collapse onto the single wire's id 0."""
+        if self.size == 2:
+            return 0
+        return hop
 
 
 @dataclass(frozen=True)
@@ -138,10 +156,26 @@ def local_block_count(nblocks: int, p: int) -> int:
     return nblocks // p
 
 
-def grid_from_devices(n_devices: int) -> Tuple[int, int]:
-    """Largest P=Q square grid using all devices (paper requires P=Q for the
-    circuit-switched PTRANS/HPL)."""
+def grid_from_devices(n_devices: int, *, square: bool = False
+                      ) -> Tuple[int, int]:
+    """Most-square P x Q factorization of ``n_devices`` (P <= Q, P*Q == n).
+
+    The paper's circuit-switched PTRANS/HPL — and :func:`transpose_perm`,
+    which is only defined on square grids — require P = Q; pass
+    ``square=True`` to enforce that contract (raises :class:`ValueError`
+    for non-square device counts instead of silently returning a
+    rectangle, e.g. 8 -> 2 x 4). The default keeps the historical
+    rectangular behavior for callers that only need a 2-D layout."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
     p = int(np.floor(np.sqrt(n_devices)))
+    if square:
+        if p * p != n_devices:
+            raise ValueError(
+                f"{n_devices} devices do not form a P=Q square grid "
+                f"(nearest squares: {p * p}, {(p + 1) ** 2}); the "
+                "circuit-switched PTRANS/HPL path requires P = Q")
+        return p, p
     while p > 1 and n_devices % p:
         p -= 1
     return p, n_devices // p

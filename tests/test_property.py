@@ -333,6 +333,29 @@ def test_down_link_never_prices_crossing_schedule_finite(hop, nbytes):
                 assert not math.isfinite(cost), (op, name, hop)
 
 
+@SETTINGS
+@given(hop=st.integers(0, 1), op=st.sampled_from(["bcast", "allreduce"]),
+       nbytes=st.sampled_from([256, 16384]))
+def test_size2_ring_down_wire_excludes_both_hop_ids(hop, op, nbytes):
+    """A size-2 ring has ONE physical wire; hops 0 and 1 are two names for
+    it. Downing either hop id must price every ICI schedule that touches
+    the axis infinite (the rooted chain cannot route around the only wire),
+    so resolution falls through to the link-free ``staged``."""
+    import math
+    axes = (AxisTopology("x", 2, "ring"),)
+    assert axes[0].links() == (("x", 0),)       # dedupe: one link reported
+    assert axes[0].canonical_hop(hop) == 0
+    health = frozenset({("x", hop)})
+    model = CostModel(hw=TPU_V5E, table=None, health=health)
+    for name in schedules_for(op):
+        route = route_links(op, name, axes, health=health)
+        if route:  # any route touching the axis touches the one wire
+            assert route == frozenset({("x", 0)}), (name, route)
+            assert not math.isfinite(model.cost(op, name, nbytes, axes)), \
+                f"{op}/{name} priced finite across the downed size-2 wire"
+    assert model.choose(op, nbytes, axes) == "staged"
+
+
 # --- HLO shape parser --------------------------------------------------------
 
 

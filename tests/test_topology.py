@@ -1,0 +1,79 @@
+"""Topology metadata unit tests: link identity (the size-2 ring dedupe)
+and the grid factorization contract."""
+from __future__ import annotations
+
+import pytest
+
+from repro.comm.topology import AxisTopology, grid_from_devices
+
+
+# ---------------------------------------------------------------------------
+# AxisTopology.links — physical wires, not hop names
+# ---------------------------------------------------------------------------
+
+
+def test_links_size2_ring_reports_one_wire():
+    # hops 0 and 1 on a 2-rank ring are the same physical wire between
+    # ranks 0 and 1; reporting both would let a health mask naming hop 1
+    # miss routes recorded under hop 0 (and vice versa)
+    ax = AxisTopology("x", 2, "ring")
+    assert ax.links() == (("x", 0),)
+    assert ax.n_links == 1
+
+
+@pytest.mark.parametrize("size", [3, 4, 8])
+def test_links_larger_rings_report_every_hop(size):
+    ax = AxisTopology("x", size, "ring")
+    assert ax.links() == tuple(("x", h) for h in range(size))
+    assert ax.n_links == size
+
+
+def test_links_staging_axis_has_none():
+    ax = AxisTopology("pod", 4, "staging")
+    assert ax.links() == ()
+    assert ax.n_links == 0
+
+
+def test_canonical_hop_collapses_only_on_size2():
+    two = AxisTopology("x", 2, "ring")
+    assert two.canonical_hop(0) == 0
+    assert two.canonical_hop(1) == 0
+    four = AxisTopology("x", 4, "ring")
+    assert [four.canonical_hop(h) for h in range(4)] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# grid_from_devices — most-square factorization, square-or-raise contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,expect", [
+    (1, (1, 1)),
+    (7, (1, 7)),       # prime: degenerate 1 x n
+    (8, (2, 4)),       # rectangular: most-square, P <= Q
+    (12, (3, 4)),
+    (16, (4, 4)),      # perfect square
+])
+def test_grid_from_devices_most_square(n, expect):
+    p, q = grid_from_devices(n)
+    assert (p, q) == expect
+    assert p * q == n and p <= q
+
+
+@pytest.mark.parametrize("n", [1, 4, 16, 64])
+def test_grid_from_devices_square_flag_accepts_squares(n):
+    p, q = grid_from_devices(n, square=True)
+    assert p == q and p * p == n
+
+
+@pytest.mark.parametrize("n", [2, 7, 8, 12])
+def test_grid_from_devices_square_flag_raises_on_rectangles(n):
+    # the circuit-switched PTRANS/HPL path (transpose_perm) needs P = Q;
+    # silently returning 2 x 4 for 8 devices was the bug
+    with pytest.raises(ValueError, match="square"):
+        grid_from_devices(n, square=True)
+
+
+def test_grid_from_devices_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        grid_from_devices(0)
